@@ -1,0 +1,42 @@
+"""Paper Fig. 12: per-model memory-prediction MRE across batch sizes.
+
+Five models x a batch sweep (scaled to this platform), predictor trained
+on the main corpus excluding the swept points.
+"""
+
+from __future__ import annotations
+
+from benchmarks import collect
+from repro.core.features import mre, targets
+from repro.core.predictor import DNNAbacus
+
+MODELS = ["vgg16", "se_resnet18", "squeezenet", "resnet152", "shufflenet_v2"]
+BATCHES = (8, 16, 32, 64, 96)
+
+
+def run(seed: int = 0):
+    zoo, rand, lm = collect.corpus()
+    base = zoo + rand + lm
+    rows = []
+    sweep = {}
+    for net in MODELS:
+        combos = [dict(kind="zoo", name=net, batch=b, image=32)
+                  for b in BATCHES]
+        sweep[net] = collect.collect(combos, verbose=False)
+    swept_keys = {(r.model_name, r.batch_size, r.input_size, r.optimizer)
+                  for recs in sweep.values() for r in recs}
+    train = [r for r in base
+             if (r.model_name, r.batch_size, r.input_size, r.optimizer)
+             not in swept_keys]
+    ab = DNNAbacus(seed=seed).fit(train, candidate_factory=collect.bench_candidates)
+    for net, recs in sweep.items():
+        t_pred, m_pred = ab.predict(recs)
+        t, m = targets(recs)
+        rows.append((f"batchsweep_mem_mre[{net}]", mre(m_pred, m)))
+        rows.append((f"batchsweep_time_mre[{net}]", mre(t_pred, t)))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.4f}")

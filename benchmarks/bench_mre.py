@@ -1,0 +1,66 @@
+"""Paper Fig. 8-11: MRE of time & memory prediction vs baselines.
+
+Shuffles all profiled points, 70/30 split (paper §3.3), fits DNNAbacus
+(NSM + AutoML) and the two comparison arms — shape inference [15] and the
+PerfNet-style MLP [27,29] — and reports per-model and aggregate MRE.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import collect
+from repro.core.baselines import MLPBaseline, shape_inference_memory
+from repro.core.features import design_matrix, mre, targets
+from repro.core.predictor import DNNAbacus
+
+
+def run(seed: int = 0):
+    collect.corpus()  # ensure the base grids exist
+    records = collect.all_cached()
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(records))
+    ntr = int(0.7 * len(records))
+    train = [records[i] for i in idx[:ntr]]
+    test = [records[i] for i in idx[ntr:]]
+
+    ab = DNNAbacus(seed=seed).fit(train, candidate_factory=collect.bench_candidates)
+    ev_train = ab.evaluate(train)
+    ev = ab.evaluate(test)
+
+    # baselines
+    t_true, m_true = targets(test)
+    si_mem = np.array([shape_inference_memory(r) for r in test])
+    x_train = design_matrix(train, ab.nsm_feat)
+    x_test = design_matrix(test, ab.nsm_feat)
+    tt, mt = targets(train)
+    mlp_t = MLPBaseline(seed=seed).fit(x_train, tt)
+    mlp_m = MLPBaseline(seed=seed).fit(x_train, mt)
+
+    rows = [
+        ("abacus_time_mre_test", ev["time_mre"]),
+        ("abacus_mem_mre_test", ev["mem_mre"]),
+        ("abacus_time_mre_train", ev_train["time_mre"]),
+        ("abacus_mem_mre_train", ev_train["mem_mre"]),
+        ("shapeinfer_mem_mre", mre(si_mem, m_true)),
+        ("mlp_time_mre", mre(mlp_t.predict(x_test), t_true)),
+        ("mlp_mem_mre", mre(mlp_m.predict(x_test), m_true)),
+        ("n_train", float(len(train))),
+        ("n_test", float(len(test))),
+    ]
+    # per-model-family MRE (paper's per-network bars)
+    fams = sorted({r.model_name for r in test})
+    t_pred, m_pred = ab.predict(test)
+    for fam in fams[:40]:
+        sel = [i for i, r in enumerate(test) if r.model_name == fam]
+        if not sel:
+            continue
+        rows.append((f"time_mre[{fam}]",
+                     mre(t_pred[sel], t_true[sel])))
+    ab.save("artifacts/abacus")
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.4f}")

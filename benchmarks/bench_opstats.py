@@ -1,0 +1,59 @@
+"""Paper Fig. 3-4: operator-selection statistics vs batch size.
+
+The TPU/XLA analogue of the paper's cuDNN-algorithm analysis: for each
+batch size, the histogram of HLO op categories in the compiled training
+step (fusion counts, dot/conv/reduce counts) — the compiler's choice
+structure that makes analytical cost models fail.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profiler import zoo_train_step
+from repro.core.zoo import build_zoo_model
+
+
+def _hist(name: str, batch: int):
+    model = build_zoo_model(name)
+    params = model.init(jax.random.key(0))
+    step, init_opt = zoo_train_step(model, "sgd", 0.1)
+    opt = init_opt(params)
+    sds = lambda t: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    x = jax.ShapeDtypeStruct((batch, 32, 32, 3), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    txt = jax.jit(step).lower(sds(params), sds(opt), x, y).compile().as_text()
+    ops = Counter()
+    for m in re.finditer(r"=\s*\(?[a-z0-9]+\[[^\]]*\][^ ]*\)?\s+([\w\-]+)\(",
+                         txt):
+        ops[m.group(1)] += 1
+    return ops
+
+
+def run():
+    rows = []
+    for net in ("vgg11", "mobilenet_v1"):
+        base = None
+        for batch in (8, 32):
+            ops = _hist(net, batch)
+            total = sum(ops.values())
+            for kind in ("convolution", "fusion", "dot", "reduce"):
+                rows.append((f"opfrac[{net},b={batch},{kind}]",
+                             ops.get(kind, 0) / total))
+            if base is None:
+                base = ops
+            else:  # does the op mix change with batch (the paper's point)?
+                drift = sum(abs(ops[k] - base[k])
+                            for k in set(ops) | set(base))
+                rows.append((f"opmix_drift[{net}]", float(drift)))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.4f}")

@@ -1,0 +1,39 @@
+"""Paper Fig. 1-2: time & peak memory vs batch size, lightweight vs heavy.
+
+Reproduces the profiling study's qualitative findings on this platform:
+monotone-ish time growth with batch for 1x1-conv ("lightweight")
+networks, and the relative fluctuation magnitude of each family.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import collect
+from repro.core.zoo import LIGHTWEIGHT
+
+
+def run():
+    nets = ["squeezenet", "mobilenet_v1", "vgg11", "resnet18"]
+    batches = (8, 16, 24, 32, 48, 64)
+    rows = []
+    for net in nets:
+        combos = [dict(kind="zoo", name=net, batch=b, image=32)
+                  for b in batches]
+        recs = collect.collect(combos, verbose=False)
+        times = np.array([r.time_s for r in recs])
+        mems = np.array([r.mem_bytes for r in recs])
+        per_sample = times / np.array(batches[:len(times)])
+        tag = "light" if net in LIGHTWEIGHT else "heavy"
+        rows.append((f"time_per_sample_trend[{net},{tag}]",
+                     float(per_sample[-1] / per_sample[0])))
+        rows.append((f"mem_growth[{net}]", float(mems[-1] / mems[0])))
+        for b, t, m in zip(batches, times, mems):
+            rows.append((f"profile[{net},b={b}]_time_ms", float(t * 1e3)))
+            rows.append((f"profile[{net},b={b}]_mem_mib", float(m / 2**20)))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.4f}")

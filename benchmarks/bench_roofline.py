@@ -1,0 +1,48 @@
+"""Roofline table (assignment §Roofline) from the dry-run sweep records."""
+
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN = os.environ.get("REPRO_DRYRUN_OUT", "artifacts/dryrun.jsonl")
+
+
+def load():
+    recs = {}
+    if os.path.exists(DRYRUN):
+        with open(DRYRUN) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                key = (r.get("arch"), r.get("shape"), r.get("multi_pod"))
+                recs[key] = r  # latest wins
+    return recs
+
+
+def run():
+    rows = []
+    recs = load()
+    ok = [r for r in recs.values()
+          if r.get("status") == "ok" and not r.get("multi_pod")]
+    for r in sorted(ok, key=lambda r: (r["shape"], r["arch"])):
+        tag = f"{r['arch']}|{r['shape']}"
+        rows.append((f"roofline[{tag}]_t_compute_ms", r["t_compute_s"] * 1e3))
+        rows.append((f"roofline[{tag}]_t_memory_ms", r["t_memory_s"] * 1e3))
+        rows.append((f"roofline[{tag}]_t_coll_ms", r["t_collective_s"] * 1e3))
+        rows.append((f"roofline[{tag}]_mfu_bound", r.get("mfu_bound", 0.0)))
+        rows.append((f"roofline[{tag}]_peak_gib", r["peak_hbm_gib"]))
+    n_multi = sum(1 for r in recs.values()
+                  if r.get("multi_pod") and r.get("status") == "ok")
+    n_skip = sum(1 for r in recs.values() if r.get("status") == "skipped")
+    rows.append(("cells_single_pod_ok", float(len(ok))))
+    rows.append(("cells_multi_pod_ok", float(n_multi)))
+    rows.append(("cells_skipped_documented", float(n_skip)))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.4f}")

@@ -1,0 +1,33 @@
+"""Paper Fig. 13: zero-shot MRE on unseen model families, NSM vs GE.
+
+Hold out the paper's exact unseen set (InceptionV3, StochasticDepth-34,
+ResNet-50, PreActResNet-152, SE-ResNet-34); train on everything else;
+compare the structural-matrix and graph-embedding representations.
+"""
+
+from __future__ import annotations
+
+from benchmarks import collect
+from repro.core.predictor import DNNAbacus
+from repro.core.zoo import UNSEEN
+
+
+def run(seed: int = 0):
+    collect.corpus()  # ensure the base grids exist
+    records = collect.all_cached()
+    unseen = [r for r in records if r.model_name in UNSEEN]
+    seen = [r for r in records if r.model_name not in UNSEEN]
+    rows = []
+    for rep in ("nsm", "ge"):
+        ab = DNNAbacus(representation=rep, seed=seed).fit(
+            seen, candidate_factory=collect.bench_candidates)
+        ev = ab.evaluate(unseen)
+        rows.append((f"unseen_time_mre[{rep}]", ev["time_mre"]))
+        rows.append((f"unseen_mem_mre[{rep}]", ev["mem_mre"]))
+    rows.append(("n_unseen", float(len(unseen))))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.4f}")

@@ -1,0 +1,52 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,value`` CSV rows per benchmark. Wall-time-heavy data
+collection is cached in artifacts/profiles.jsonl (see collect.py);
+BENCH_FULL=1 widens the profiling grid toward the paper's scale.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("kernels", "benchmarks.bench_kernels"),            # kernel allclose
+    ("profiling", "benchmarks.bench_profiling"),        # Fig 1-2
+    ("opstats", "benchmarks.bench_opstats"),            # Fig 3-4
+    ("mre", "benchmarks.bench_mre"),                    # Fig 8-11
+    ("batch_mre", "benchmarks.bench_batch_mre"),        # Fig 12
+    ("unseen", "benchmarks.bench_unseen"),              # Fig 13
+    ("scheduling", "benchmarks.bench_scheduling"),      # Fig 14 / §4.3
+    ("roofline", "benchmarks.bench_roofline"),          # §Roofline
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    failures = 0
+    for name, module in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ({module}) ===", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            for row_name, val in mod.run():
+                print(f"{name}.{row_name},{val:.6g}")
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Quickstart: the three layers of the framework in one script.
+
+1. profile a few training configurations (the paper's §2 rig);
+2. fit DNNAbacus and predict cost for an unseen configuration (§3);
+3. train a reduced assigned architecture for a few steps with the
+   production Trainer (checkpointed, fault-tolerant).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.core.automl.models import (GradientBoostingRegressor,
+                                      RandomForestRegressor, RidgeRegressor)
+from repro.core.predictor import DNNAbacus
+from repro.core.profiler import profile_zoo
+from repro.models import build_model
+from repro.train import optimizer as opt_lib
+from repro.train.loop import LoopConfig, Trainer
+
+
+def main():
+    # 1. profile -------------------------------------------------------
+    print("== profiling a few CNN training configs ==")
+    records = []
+    for net in ("lenet5", "squeezenet", "nin"):
+        for batch in (8, 16, 32):
+            r = profile_zoo(net, batch=batch, steps=2)
+            records.append(r)
+            print(f"  {net:12s} b={batch:3d}  {r.time_s*1e3:8.1f} ms  "
+                  f"{r.mem_bytes/2**20:8.1f} MiB")
+
+    # 2. fit + predict --------------------------------------------------
+    print("== fitting DNNAbacus ==")
+    fac = lambda seed: [RandomForestRegressor(n_trees=25, seed=seed),
+                        GradientBoostingRegressor(n_stages=100, seed=seed),
+                        RidgeRegressor()]
+    abacus = DNNAbacus().fit(records, candidate_factory=fac)
+    probe = profile_zoo("squeezenet", batch=24, steps=2)  # unseen batch
+    t_pred, m_pred = abacus.predict([probe])
+    print(f"  unseen config: predicted {t_pred[0]*1e3:.1f} ms "
+          f"(measured {probe.time_s*1e3:.1f} ms), "
+          f"{m_pred[0]/2**20:.1f} MiB (measured {probe.mem_bytes/2**20:.1f})")
+
+    # 3. train an assigned arch (reduced) --------------------------------
+    print("== training reduced qwen2-0.5b for 10 steps ==")
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    model = build_model(cfg)
+    trainer = Trainer(model, opt_lib.OptConfig(),
+                      LoopConfig(steps=10, batch=4, seq=64, log_every=3))
+    log = trainer.run()
+    for rec in log:
+        print(f"  step {rec['step']:3d} loss {rec['loss']:.4f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end training driver: ~100M-parameter LM for a few hundred steps.
+
+Uses the full production stack — sharded data pipeline, AdamW with ZeRO
+state, atomic checkpoints, fault-tolerant step runner — on the host
+devices. The model is a scaled qwen2-family config of ~100M params.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train import optimizer as opt_lib
+from repro.train.loop import LoopConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: qwen2 family at width 512 / 8 layers / 16k vocab
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b"), name="qwen2-100m", num_layers=8,
+        d_model=512, num_heads=8, num_kv_heads=2, head_dim=64, d_ff=2048,
+        vocab_size=16384, dtype="float32", remat="none",
+        tie_embeddings=True)
+    model = build_model(cfg)
+    print(f"params: {model.param_count()/1e6:.1f}M")
+
+    trainer = Trainer(
+        model, opt_lib.OptConfig(lr=1e-3, warmup_steps=50,
+                                 decay_steps=args.steps),
+        LoopConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                   ckpt_every=100, ckpt_dir=args.ckpt_dir, log_every=20))
+    log = trainer.run()
+    trainer.write_log("artifacts/train_lm_log.jsonl")
+    first, last = log[0]["loss"], log[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"(retries={trainer.runner.retries})")
+    assert last < first, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,367 @@
+"""Static cost analysis of compiled HLO text with loop-trip attribution.
+
+XLA's built-in ``compiled.cost_analysis()`` counts ``while`` bodies ONCE,
+which under-reports every scan-over-layers model by ~num_layers x. This
+module re-derives FLOPs / bytes-accessed / collective-bytes directly from
+``compiled.as_text()``:
+
+  - computations are parsed into instruction lists with resolved shapes;
+  - ``while`` ops multiply their body cost by the trip count taken from
+    the ``backend_config known_trip_count`` (emitted by JAX scans), with
+    nested loops multiplying recursively;
+  - ``fusion`` / ``call`` / ``reduce`` recurse into their called
+    computations for FLOPs but charge HBM bytes only at the call site
+    (fusion internals live in registers/VMEM);
+  - dot FLOPs = 2 x result elements x contracted elements; convolution
+    FLOPs = 2 x result elements x kernel elements / out-channels;
+    elementwise ops are charged 1 FLOP per result element;
+  - collective bytes (all-reduce 2x weighting, others 1x) accumulate with
+    the same loop multipliers — a per-layer all-gather inside the scan is
+    counted num_layers times, as it executes.
+
+This is the dry-run "profiler" used for the roofline terms in
+EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute", "collective-broadcast", "ragged-all-to-all")
+_COLL_WEIGHT = {k: (2.0 if k == "all-reduce" else 1.0) for k in COLL_OPS}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_instr_line(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """-> (name, type_str, op, rest-after-open-paren) or None."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple type: consume balanced parens
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        type_str, rest = rest[:end], rest[end:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    m2 = _OP_RE.match(rest)
+    if not m2:
+        return None
+    return m.group(1), type_str, m2.group(1), rest[m2.end():]
+
+
+def _shape_info(shape_str: str) -> Tuple[int, int]:
+    """-> (elements, bytes) summed over tuple components."""
+    elems_total, bytes_total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return elems_total, bytes_total
+
+
+def _dims_of(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # raw remainder of the line (operands + attributes)
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_weighted: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.coll_weighted += other.coll_weighted * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations = self._parse(hlo_text)
+        self.entry = self._entry_name(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    # -- parsing -----------------------------------------------------------
+    @staticmethod
+    def _entry_name(text: str) -> Optional[str]:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        return m.group(1) if m else None
+
+    @staticmethod
+    def _parse(text: str) -> Dict[str, List[Instr]]:
+        comps: Dict[str, List[Instr]] = {}
+        current: Optional[str] = None
+        for line in text.splitlines():
+            if current is None:
+                stripped = line.strip()
+                m = (_COMP_RE.match(stripped)
+                     if stripped.endswith("{") and "->" in stripped else None)
+                if m:
+                    current = m.group(1)
+                    comps[current] = []
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            parsed = _parse_instr_line(line)
+            if not parsed:
+                continue
+            name, shape, op, rest = parsed
+            paren = rest.split(")")[0] if ")" in rest else rest
+            operands = _OPERAND_RE.findall(paren)
+            comps[current].append(Instr(name, shape.strip(), op, rest, operands))
+        return comps
+
+    # -- cost model --------------------------------------------------------
+    def _shape_env(self, comp: str) -> Dict[str, str]:
+        return {i.name: i.shape for i in self.computations.get(comp, [])}
+
+    @staticmethod
+    def _trip_count(rest: str) -> float:
+        m = re.search(r'known_trip_count[\\"]*:\s*{[\\"]*n[\\"]*:[\\"]*(\d+)', rest)
+        if m:
+            return float(m.group(1))
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+        if m:
+            return float(m.group(1))
+        return 1.0  # unknown loop: conservative single execution
+
+    def _called(self, rest: str) -> List[str]:
+        names = []
+        for key in ("calls=", "to_apply=", "condition=", "body=", "branch_computations="):
+            for m in re.finditer(re.escape(key) + r"\{?%?([\w.\-]+)", rest):
+                names.append(m.group(1))
+        return [n for n in names if n in self.computations]
+
+    def _dot_flops(self, instr: Instr, env: Dict[str, str]) -> float:
+        out_elems, _ = _shape_info(instr.shape)
+        lhs = env.get(instr.operands[0], "") if instr.operands else ""
+        dims = _dims_of(lhs)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+        contracted = 1
+        if m and dims:
+            for d in m.group(1).split(","):
+                if d:
+                    contracted *= dims[int(d)]
+        return 2.0 * out_elems * contracted
+
+    def _conv_flops(self, instr: Instr, env: Dict[str, str]) -> float:
+        out_elems, _ = _shape_info(instr.shape)
+        kern = env.get(instr.operands[1], "") if len(instr.operands) > 1 else ""
+        kelems, _ = _shape_info(kern)
+        m = re.search(r"dim_labels=\S*->(\w+)", instr.rest)
+        out_dims = _dims_of(instr.shape)
+        cout = 1
+        if m and out_dims:
+            pos = m.group(1).find("f")
+            if 0 <= pos < len(out_dims):
+                cout = out_dims[pos]
+        g = 1
+        mg = re.search(r"feature_group_count=(\d+)", instr.rest)
+        if mg:
+            g = int(mg.group(1))
+        return 2.0 * out_elems * (kelems / max(cout, 1)) * 1.0 if g else 0.0
+
+    def _instr_cost(self, instr: Instr, comp: str, env: Dict[str, str],
+                    top_level: bool) -> Cost:
+        c = Cost()
+        op = instr.op
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        _, out_bytes = _shape_info(instr.shape)
+        operand_bytes = sum(_shape_info(env.get(o, ""))[1]
+                            for o in instr.operands)
+
+        if base in COLL_OPS:
+            c.coll_bytes += out_bytes
+            c.coll_weighted += out_bytes * _COLL_WEIGHT[base]
+            c.coll_counts[base] = c.coll_counts.get(base, 0) + 1
+            c.bytes += out_bytes + operand_bytes
+            return c
+        if op in ("get-tuple-element", "tuple", "parameter", "constant",
+                  "bitcast", "after-all", "all-reduce-done",
+                  "all-gather-done", "copy-done"):
+            return c
+        if op == "while":
+            trip = self._trip_count(instr.rest)
+            mb = re.search(r"body=%?([\w.\-]+)", instr.rest)
+            mc = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+            if mb and mb.group(1) in self.computations:
+                c.add(self.comp_cost(mb.group(1)), trip)
+            if mc and mc.group(1) in self.computations:
+                c.add(self.comp_cost(mc.group(1)), trip + 1)
+            return c
+        if op == "conditional":
+            branches = self._called(instr.rest)
+            if branches:
+                worst = max((self.comp_cost(b) for b in branches),
+                            key=lambda x: x.flops + x.bytes, default=Cost())
+                c.add(worst)
+            c.bytes += out_bytes + operand_bytes
+            return c
+        if op == "dynamic-slice":
+            # reads only the slice, not the (possibly loop-carried) buffer
+            c.flops += 0
+            if top_level:
+                c.bytes += 2 * out_bytes
+            return c
+        if op == "dynamic-update-slice":
+            # aliased in-place update: traffic ~ 2x the updated slice
+            upd = (_shape_info(env.get(instr.operands[1], ""))[1]
+                   if len(instr.operands) > 1 else out_bytes)
+            if top_level:
+                c.bytes += 2 * upd
+            return c
+        if op in ("fusion", "call", "custom-call", "reduce", "map", "sort",
+                  "reduce-window", "scatter", "select-and-scatter",
+                  "async-start"):
+            materialized_inner = op in ("call", "custom-call", "async-start")
+            for name in self._called(instr.rest):
+                inner = self.comp_cost(name, materialized=materialized_inner)
+                c.flops += inner.flops
+                c.bytes += inner.bytes
+                c.coll_bytes += inner.coll_bytes
+                c.coll_weighted += inner.coll_weighted
+                for k, v in inner.coll_counts.items():
+                    c.coll_counts[k] = c.coll_counts.get(k, 0) + v
+            if top_level:
+                if op == "fusion" and self._called(instr.rest):
+                    c.bytes += self._fusion_io_bytes(instr, env)
+                else:
+                    c.bytes += out_bytes + operand_bytes
+            if op == "reduce" and not self._called(instr.rest):
+                c.flops += sum(_shape_info(env.get(o, ""))[0]
+                               for o in instr.operands[:1])
+            return c
+        if op == "dot":
+            c.flops += self._dot_flops(instr, env)
+            if top_level:
+                c.bytes += out_bytes + operand_bytes
+            return c
+        if op == "convolution":
+            c.flops += self._conv_flops(instr, env)
+            if top_level:
+                c.bytes += out_bytes + operand_bytes
+            return c
+        # generic elementwise-ish op: 1 flop per output element
+        out_elems, _ = _shape_info(instr.shape)
+        c.flops += out_elems
+        if top_level:
+            c.bytes += out_bytes + operand_bytes
+        return c
+
+    def _fusion_io_bytes(self, instr: Instr, env: Dict[str, str]) -> float:
+        """HBM traffic of a fusion: operands read + result written, except
+        operands consumed ONLY via dynamic-slice inside the fusion are
+        charged at slice size (loop-carried stacked buffers are views),
+        and a dynamic-update-slice root writes only its update slice."""
+        comp = self._called(instr.rest)[0]
+        instrs = self.computations.get(comp, [])
+        ienv = {i.name: i.shape for i in instrs}
+        # map parameter name -> index (Instr.rest starts right after the
+        # op's open paren: "0), ..." for "parameter(0)")
+        pidx = {}
+        for i in instrs:
+            if i.op == "parameter":
+                m = re.match(r"\s*(\d+)\)", i.rest)
+                if m:
+                    pidx[i.name] = int(m.group(1))
+        consumers: Dict[str, List[Instr]] = {}
+        for i in instrs:
+            for o in i.operands:
+                consumers.setdefault(o, []).append(i)
+        total = 0.0
+        for pname, idx in pidx.items():
+            outer = (env.get(instr.operands[idx], "")
+                     if idx < len(instr.operands) else "")
+            full = _shape_info(outer or ienv.get(pname, ""))[1]
+            cons = consumers.get(pname, [])
+            if cons and all(c.op == "dynamic-slice" and c.operands
+                            and c.operands[0] == pname for c in cons):
+                total += sum(_shape_info(c.shape)[1] for c in cons)
+            elif cons and all(c.op == "dynamic-update-slice" and c.operands
+                              and c.operands[0] == pname for c in cons):
+                total += 0.0  # aliased buffer pass-through
+            else:
+                total += full
+        root = instrs[-1] if instrs else None
+        if root is not None and root.op == "dynamic-update-slice":
+            total += 2 * _shape_info(
+                ienv.get(root.operands[1], ""))[1] if len(root.operands) > 1 else 0
+        else:
+            total += _shape_info(instr.shape)[1]
+        return total
+
+    def comp_cost(self, comp: str, materialized: bool = True) -> Cost:
+        """Cost of one computation. ``materialized=False`` for fusion-called
+        bodies whose intermediates live in registers (flops only, no HBM
+        bytes); while/call bodies are materialized."""
+        key = (comp, materialized)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()  # cycle guard
+        env = self._shape_env(comp)
+        total = Cost()
+        for instr in self.computations.get(comp, []):
+            total.add(self._instr_cost(instr, comp, env,
+                                       top_level=materialized))
+        self._memo[key] = total
+        return total
+
+    def total(self) -> Cost:
+        if not self.entry:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()

@@ -1,0 +1,174 @@
+"""Roofline-term derivation from AOT-compiled executables.
+
+Hardware model (TPU v5e target, per assignment):
+  peak_flops = 197e12 bf16 FLOP/s per chip
+  hbm_bw     = 819e9  B/s per chip
+  link_bw    = 50e9   B/s per ICI link
+
+Terms (seconds, per step, per chip — cost_analysis of the SPMD-partitioned
+module is already per-device):
+  compute    = HLO_FLOPs / peak_flops
+  memory     = HLO_bytes_accessed / hbm_bw
+  collective = weighted collective bytes / link_bw
+               (all-reduce counts 2x — ring AR moves ~2 x size/device;
+                all-gather / reduce-scatter / all-to-all / permute 1x)
+
+``collective_bytes`` is parsed from the compiled HLO text: result-shape
+bytes of every collective op (async ``-start`` forms counted once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "collective-broadcast": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+# "bf16[8,128,4096]{2,1,0} all-gather(" — possibly a tuple for variadic ops.
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^\]=]*\][^ ]*\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast|ragged-all-to-all)(-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes, weighted_bytes} from HLO text."""
+    out: Dict[str, Dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        e = out.setdefault(kind, {"count": 0, "bytes": 0.0, "weighted": 0.0})
+        e["count"] += 1
+        e["bytes"] += b
+        e["weighted"] += b * _COLL_WEIGHT[kind]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float        # raw result bytes
+    collective_weighted: float     # link-time-weighted bytes
+    collectives: Dict[str, Dict[str, float]]
+    peak_hbm_per_device: float
+    argument_bytes: float
+    output_bytes: float
+    temp_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_weighted / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def summary(self, model_flops_per_device: Optional[float] = None) -> Dict:
+        d = {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "collective_weighted_bytes": self.collective_weighted,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "peak_hbm_gib": self.peak_hbm_per_device / 2**30,
+            "argument_gib": self.argument_bytes / 2**30,
+            "temp_gib": self.temp_bytes / 2**30,
+            "collectives": self.collectives,
+        }
+        if model_flops_per_device:
+            d["model_flops_per_device"] = model_flops_per_device
+            d["useful_flop_fraction"] = model_flops_per_device / max(self.flops, 1)
+            d["mfu_bound"] = (model_flops_per_device / PEAK_FLOPS) / max(
+                self.t_bound, 1e-12)
+        return d
+
+
+def analyze(compiled, lowered=None) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    FLOPs/bytes/collectives come from the loop-aware HLO static analyzer
+    (``repro.analysis.hlo``) because XLA's flat ``cost_analysis()`` counts
+    ``while`` (scan-over-layers) bodies once; memory sizes come from
+    ``memory_analysis()`` (allocation-based, loop-correct already).
+    """
+    from repro.analysis import hlo as hlo_lib
+    ma = compiled.memory_analysis()
+    text = compiled.as_text()
+    cost = hlo_lib.analyze_text(text)
+    colls = {k: {"count": v} for k, v in cost.coll_counts.items()}
+    temp = getattr(ma, "temp_size_in_bytes", 0)
+    arg = getattr(ma, "argument_size_in_bytes", 0)
+    out = getattr(ma, "output_size_in_bytes", 0)
+    alias = getattr(ma, "alias_size_in_bytes", 0)
+    peak = arg + out + temp - alias
+    return Roofline(
+        flops=cost.flops,
+        bytes_accessed=cost.bytes,
+        collective_bytes=cost.coll_bytes,
+        collective_weighted=cost.coll_weighted,
+        collectives=colls,
+        peak_hbm_per_device=peak,
+        argument_bytes=arg,
+        output_bytes=out,
+        temp_bytes=temp,
+    )
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D forward-only."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n = n_active if cfg.num_experts else n_params
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n * tokens)

@@ -1,0 +1,18 @@
+"""Qwen2.5-32B — dense, GQA kv=8, QKV bias.
+
+[hf:Qwen/Qwen2.5-0.5B family card; hf]. 64L, d_model 5120, 40 heads,
+d_ff 27648, 152k vocab.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=27648,
+    vocab_size=152064,
+    qkv_bias=True,
+)

@@ -1,0 +1,91 @@
+"""Comparison baselines from the paper's evaluation (§4.1).
+
+- Shape inference [15]: memory = sizes of weights + inputs + outputs
+  discoverable from the computation graph. The paper reports 46.8% MRE —
+  it systematically underestimates because workspace/temporaries are
+  invisible to shapes.
+- MLP regressor [27, 29] (PerfNet-style): a small 4-layer MLP trained in
+  JAX on the same features.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import ProfileRecord, design_matrix
+
+
+def shape_inference_memory(record: ProfileRecord) -> float:
+    """Weights + input/output tensor bytes (fp32), per the [15] baseline."""
+    params_bytes = record.params * 4.0
+    if record.family == "cnn":
+        io = record.batch_size * record.input_size ** 2 * record.channels * 4.0
+    else:
+        io = record.batch_size * record.input_size * record.channels * 4.0
+    return params_bytes * 2.0 + io * 2.0  # params + grads, in + out
+
+
+class MLPBaseline:
+    """PerfNet-style 4-layer MLP regressor (fit in log space)."""
+
+    def __init__(self, hidden=(64, 64, 32), lr: float = 1e-3,
+                 epochs: int = 400, seed: int = 0):
+        self.hidden = hidden
+        self.lr = lr
+        self.epochs = epochs
+        self.seed = seed
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        self.mu, self.sd = x.mean(0), x.std(0) + 1e-9
+        xn = jnp.asarray((x - self.mu) / self.sd, jnp.float32)
+        yl_raw = np.log(np.maximum(y, 1e-12))
+        self.ymu, self.ysd = float(yl_raw.mean()), float(yl_raw.std() + 1e-9)
+        yl = jnp.asarray((yl_raw - self.ymu) / self.ysd, jnp.float32)
+        key = jax.random.key(self.seed)
+        sizes = [x.shape[1], *self.hidden, 1]
+        params = []
+        for i in range(len(sizes) - 1):
+            key, k = jax.random.split(key)
+            params.append({
+                "w": jax.random.normal(k, (sizes[i], sizes[i + 1]))
+                * (1.0 / np.sqrt(sizes[i])),
+                "b": jnp.zeros((sizes[i + 1],))})
+
+        def forward(p, a):
+            for i, layer in enumerate(p):
+                a = a @ layer["w"] + layer["b"]
+                if i < len(p) - 1:
+                    a = jax.nn.relu(a)
+            return a[:, 0]
+
+        def loss(p):
+            return jnp.mean((forward(p, xn) - yl) ** 2)
+
+        @jax.jit
+        def step(p, m, v, t):
+            g = jax.grad(loss)(p)
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+            tf = t.astype(jnp.float32)
+            p = jax.tree.map(
+                lambda pp, mm, vv: pp - self.lr * (mm / (1 - 0.9 ** tf))
+                / (jnp.sqrt(vv / (1 - 0.999 ** tf)) + 1e-8), p, m, v)
+            return p, m, v, t + 1
+
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+        t = jnp.ones((), jnp.int32)
+        for _ in range(self.epochs):
+            params, m, v, t = step(params, m, v, t)
+        self.params = params
+        self._forward = forward
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        xn = jnp.asarray((x - self.mu) / self.sd, jnp.float32)
+        z = np.asarray(self._forward(self.params, xn))
+        return np.exp(np.minimum(z * self.ysd + self.ymu, 46.0))

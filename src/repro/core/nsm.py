@@ -1,0 +1,194 @@
+"""Network Structural Matrix (NSM) — the paper's §3.2.2, on jaxprs.
+
+The NSM counts, for every ordered operator pair (src, dst), the number of
+edges src->dst in the computation DAG. The paper builds it in one pass
+over a topological ordering of the framework graph; a jaxpr *is* a
+topologically-ordered equation list, so the construction is a single
+traversal: each equation consumes variables whose producing primitive is
+already known, incrementing cell (producer, consumer).
+
+Call-like primitives (pjit, custom_jvp/vjp, remat) are transparent —
+edges flow through them via the argument mapping. ``scan``/``while``
+bodies are traversed once and their edge counts multiplied by the trip
+count, so the NSM reflects executed structure (a 100-layer scanned stack
+is 100x one layer, exactly like the paper's per-layer graphs).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+EdgeCounts = Dict[Tuple[str, str], float]
+
+# primitive-name canonicalization (merge aliases / minor variants)
+_CANON = {
+    "add_any": "add",
+    "convert_element_type": "convert",
+    "dot_general": "dot",
+    "conv_general_dilated": "conv",
+    "broadcast_in_dim": "broadcast",
+    "squeeze": "reshape",
+    "expand_dims": "reshape",
+    "dynamic_update_slice": "dus",
+    "dynamic_slice": "ds",
+    "select_n": "select",
+    "reduce_precision": "convert",
+    "stop_gradient": "identity",
+    "copy": "identity",
+}
+
+_TRANSPARENT = {
+    "jit", "pjit", "closed_call", "core_call", "xla_call", "remat", "checkpoint",
+    "remat2", "custom_jvp_call", "custom_vjp_call", "custom_jvp_call_jaxpr",
+    "custom_vjp_call_jaxpr", "custom_vjp_call_jaxpr_p", "sharding_constraint",
+}
+
+
+def canonical(name: str) -> str:
+    return _CANON.get(name, name)
+
+
+def _sub_closed_jaxprs(eqn):
+    """[(closed_jaxpr, multiplier)] of call-like params."""
+    out = []
+    p = eqn.params
+    name = eqn.primitive.name
+    if name == "scan":
+        out.append((p["jaxpr"], float(p.get("length", 1))))
+    elif name == "while":
+        out.append((p["cond_jaxpr"], 1.0))
+        out.append((p["body_jaxpr"], 1.0))
+    elif name == "cond":
+        for b in p.get("branches", ()):
+            out.append((b, 1.0))
+    else:
+        for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+            if key in p:
+                out.append((p[key], 1.0))
+    return out
+
+
+def _as_jaxpr(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def nsm_edges(closed_jaxpr, mult: float = 1.0) -> EdgeCounts:
+    counts: EdgeCounts = defaultdict(float)
+    _traverse(_as_jaxpr(closed_jaxpr), {}, mult, counts)
+    return dict(counts)
+
+
+def _traverse(jaxpr, env: Dict[Any, str], mult: float, counts: EdgeCounts):
+    # env is owned by this call (callers always construct a fresh dict) and
+    # is mutated in place so producers are visible when reading outvars.
+    for v in jaxpr.constvars:
+        env[v] = "const"
+    for v in jaxpr.invars:
+        env.setdefault(v, "input")
+    for eqn in jaxpr.eqns:
+        name = canonical(eqn.primitive.name)
+        subs = _sub_closed_jaxprs(eqn)
+        if subs and (eqn.primitive.name in _TRANSPARENT
+                     or eqn.primitive.name in ("scan", "while", "cond")):
+            loop_like = eqn.primitive.name in ("scan", "while", "cond")
+            for cj, m in subs:
+                inner = _as_jaxpr(cj)
+                outer_names = [env.get(v, "input") if not isinstance(v, jcore.Literal)
+                               else "const" for v in eqn.invars]
+
+                def run_body(inv_names, body_mult):
+                    ienv: Dict[Any, str] = {}
+                    for v in inner.constvars:
+                        ienv[v] = "const"
+                    for i, v in enumerate(inner.invars):
+                        ienv[v] = (inv_names[i] if i < len(inv_names)
+                                   else "input")
+                    _traverse(inner, ienv, body_mult, counts)
+                    return [ienv.get(v, "const")
+                            if not isinstance(v, jcore.Literal) else "const"
+                            for v in inner.outvars]
+
+                if eqn.primitive.name == "scan" and m > 1:
+                    # first iteration reads the outer init; iterations 2..m
+                    # read the previous iteration's carry producers
+                    nc = eqn.params.get("num_consts", 0)
+                    ncar = eqn.params.get("num_carry", 0)
+                    first_out = run_body(outer_names, mult)
+                    fb = list(outer_names)
+                    fb[nc:nc + ncar] = first_out[:ncar]
+                    # re-run only to add boundary-edge corrections: the body
+                    # was already counted mult*1; count remaining (m-1)
+                    run_body(fb, mult * (m - 1))
+                    inner_out = first_out
+                else:
+                    inner_out = run_body(outer_names, mult * m)
+                for i, v in enumerate(eqn.outvars):
+                    env[v] = (inner_out[i] if i < len(inner_out)
+                              else (name if loop_like else "identity"))
+            continue
+        for v in eqn.invars:
+            if isinstance(v, jcore.Literal):
+                continue
+            src = env.get(v)
+            if src and src not in ("input", "const"):
+                counts[(src, name)] += mult
+        for v in eqn.outvars:
+            env[v] = name
+
+
+# ---------------------------------------------------------------------------
+# Fixed-vocabulary featurization
+# ---------------------------------------------------------------------------
+
+
+class NSMFeaturizer:
+    """Maps edge-count dicts to a fixed (V x V) matrix / flat vector."""
+
+    def __init__(self, vocab=None, max_vocab: int = 28):
+        self.vocab = list(vocab) if vocab else None
+        self.max_vocab = max_vocab
+
+    def fit(self, edge_dicts) -> "NSMFeaturizer":
+        freq: Dict[str, float] = defaultdict(float)
+        for d in edge_dicts:
+            for (a, b), n in d.items():
+                freq[a] += n
+                freq[b] += n
+        ops = sorted(freq, key=lambda k: -freq[k])[: self.max_vocab - 1]
+        self.vocab = sorted(ops) + ["<other>"]
+        return self
+
+    def _idx(self, op: str) -> int:
+        try:
+            return self.vocab.index(op)
+        except ValueError:
+            return len(self.vocab) - 1
+
+    def matrix(self, edges: EdgeCounts) -> np.ndarray:
+        v = len(self.vocab)
+        m = np.zeros((v, v), np.float64)
+        for (a, b), n in edges.items():
+            m[self._idx(a), self._idx(b)] += n
+        return m
+
+    def vector(self, edges: EdgeCounts, log_scale: bool = True) -> np.ndarray:
+        m = self.matrix(edges)
+        flat = m.reshape(-1)
+        aug = np.concatenate([flat, m.sum(0), m.sum(1)])  # + in/out degrees
+        return np.log1p(aug) if log_scale else aug
+
+    @property
+    def dim(self) -> int:
+        v = len(self.vocab)
+        return v * v + 2 * v
+
+
+def nsm_of_fn(fn: Callable, *example_args, **kw) -> EdgeCounts:
+    """NSM edges of ``fn`` traced at the given (Shape/array) arguments."""
+    closed = jax.make_jaxpr(fn)(*example_args, **kw)
+    return nsm_edges(closed)

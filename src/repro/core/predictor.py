@@ -1,0 +1,127 @@
+"""DNNAbacus — the end-to-end predictor (paper §3).
+
+Pipeline: ProfileRecords -> [structure-independent features | NSM vector
+(or WL graph embedding)] -> AutoML-lite ensembles for time and memory.
+
+``save``/``load`` persist everything (featurizer vocab + serialized tree
+ensembles) as JSON so the launcher's admission control can run without
+refitting.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import nsm as nsm_lib
+from repro.core.automl.search import FittedEnsemble, fit_automl
+from repro.core.features import ProfileRecord, design_matrix, mre, targets
+from repro.core.graphfeat import WLGraphEmbedder
+
+HBM_PER_DEVICE = 16 * 2**30  # v5e target; host budget used on CPU
+
+
+class DNNAbacus:
+    def __init__(self, representation: str = "nsm", max_vocab: int = 28,
+                 seed: int = 0):
+        assert representation in ("nsm", "ge", "none")
+        self.representation = representation
+        self.seed = seed
+        self.nsm_feat = (nsm_lib.NSMFeaturizer(max_vocab=max_vocab)
+                         if representation == "nsm" else None)
+        self.ge_feat = (WLGraphEmbedder() if representation == "ge" else None)
+        self.time_model: Optional[FittedEnsemble] = None
+        self.mem_model: Optional[FittedEnsemble] = None
+
+    # -- featurization ------------------------------------------------------
+    def _x(self, records: Sequence[ProfileRecord]) -> np.ndarray:
+        return design_matrix(list(records), self.nsm_feat, self.ge_feat)
+
+    def fit(self, records: Sequence[ProfileRecord], val_frac: float = 0.2,
+            candidate_factory=None) -> "DNNAbacus":
+        """``candidate_factory(seed) -> [models]`` builds a FRESH candidate
+        pool per target (the time and memory ensembles must not share
+        model objects)."""
+        if self.nsm_feat is not None:
+            self.nsm_feat.fit([r.nsm_edges for r in records])
+        x = self._x(records)
+        t, m = targets(list(records))
+        mk = candidate_factory or (lambda seed: None)
+        self.time_model = fit_automl(x, t, val_frac=val_frac, seed=self.seed,
+                                     candidates=mk(self.seed))
+        self.mem_model = fit_automl(x, m, val_frac=val_frac,
+                                    seed=self.seed + 1,
+                                    candidates=mk(self.seed + 1))
+        return self
+
+    def predict(self, records: Sequence[ProfileRecord]):
+        x = self._x(records)
+        return self.time_model.predict(x), self.mem_model.predict(x)
+
+    def evaluate(self, records: Sequence[ProfileRecord]) -> Dict[str, float]:
+        t_pred, m_pred = self.predict(records)
+        t, m = targets(list(records))
+        return {"time_mre": mre(t_pred, t), "mem_mre": mre(m_pred, m)}
+
+    # -- launcher integration ------------------------------------------------
+    def predict_config(self, cfg, batch: int, seq: int) -> Dict[str, float]:
+        """Admission-control estimate for a (ModelConfig, batch, seq) job."""
+        from repro.core.profiler import profile_lm  # features only, no run
+        from repro.models import build_model
+        import jax
+        import jax.numpy as jnp
+        from repro.train import optimizer as opt_lib
+        from repro.train import step as step_lib
+
+        model = build_model(cfg)
+        opt_cfg = opt_lib.OptConfig(keep_master=False)
+        step = step_lib.make_train_step(model, opt_cfg)
+        state_sds = step_lib.state_shapes(model, opt_cfg)
+        b = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+        if cfg.cross_every:
+            b["patches"] = jax.ShapeDtypeStruct(
+                (batch, cfg.vision_seq, cfg.d_model), dt)
+        if cfg.is_encoder_decoder:
+            b["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.audio_seq, cfg.d_model), dt)
+        closed = jax.make_jaxpr(step)(state_sds, b)
+        edges = nsm_lib.nsm_edges(closed)
+        rec = ProfileRecord(
+            model_name=cfg.name, family=cfg.family, batch_size=batch,
+            input_size=seq, channels=cfg.d_model, learning_rate=1e-3,
+            epoch=1, optimizer="adamw", layers=cfg.num_layers,
+            flops=6.0 * model.param_count(active_only=True) * batch * seq,
+            params=model.param_count(), nsm_edges=edges)
+        t_pred, m_pred = self.predict([rec])
+        return {"time_s": float(t_pred[0]),
+                "memory_bytes": float(m_pred[0]),
+                "hbm_budget": float(HBM_PER_DEVICE)}
+
+    # -- persistence ----------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        d = {
+            "representation": self.representation,
+            "seed": self.seed,
+            "vocab": self.nsm_feat.vocab if self.nsm_feat else None,
+            "time_model": self.time_model.to_dict(),
+            "mem_model": self.mem_model.to_dict(),
+        }
+        with open(path + ".json", "w") as f:
+            json.dump(d, f)
+
+    @classmethod
+    def load(cls, path: str) -> "DNNAbacus":
+        with open(path + ".json") as f:
+            d = json.load(f)
+        ab = cls(representation=d["representation"], seed=d["seed"])
+        if ab.nsm_feat is not None:
+            ab.nsm_feat.vocab = d["vocab"]
+        ab.time_model = FittedEnsemble.from_dict(d["time_model"])
+        ab.mem_model = FittedEnsemble.from_dict(d["mem_model"])
+        return ab

@@ -1,0 +1,674 @@
+"""The paper's 29 classic CNNs, in JAX (CIFAR-scale, NHWC).
+
+A small sequential/block framework: each layer exposes
+``spec(cin) -> (param_spec, cout)`` and ``apply(params, x)``; networks are
+layer lists built by family constructors. The profiler trains these for
+real on the host backend to collect (features -> time, memory) points —
+the reproduction of the paper's data-collection rig (§2, §4).
+
+The unseen-model split of Fig. 13 (InceptionV3, StochasticDepth-34,
+ResNet-50, PreActResNet-152, SE-ResNet-34) matches the paper exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import ParamSpec, init_params, spec
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+
+class Layer:
+    def spec(self, cin: int):
+        raise NotImplementedError
+
+    def apply(self, p, x):
+        raise NotImplementedError
+
+
+class Conv(Layer):
+    def __init__(self, cout, k=3, stride=1, groups=1, bias=False, pad="SAME"):
+        self.cout, self.k, self.stride = cout, k, stride
+        self.groups, self.bias, self.pad = groups, bias, pad
+
+    def spec(self, cin):
+        p = {"w": spec((self.k, self.k, cin // self.groups, self.cout),
+                       (None, None, None, None))}
+        if self.bias:
+            p["b"] = spec((self.cout,), (None,), "zeros")
+        return p, self.cout
+
+    def apply(self, p, x):
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], (self.stride, self.stride), self.pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=self.groups)
+        if "b" in p:
+            y = y + p["b"]
+        return y
+
+
+class Depthwise(Conv):
+    def __init__(self, k=3, stride=1, bias=False):
+        super().__init__(cout=0, k=k, stride=stride, bias=bias)
+
+    def spec(self, cin):
+        self.cout = cin
+        self.groups = cin
+        return super().spec(cin)
+
+
+class BN(Layer):
+    def spec(self, cin):
+        return {"g": spec((cin,), (None,), "ones"),
+                "b": spec((cin,), (None,), "zeros")}, cin
+
+    def apply(self, p, x):
+        mu = x.mean(axis=(0, 1, 2), keepdims=True)
+        var = x.var(axis=(0, 1, 2), keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+class Act(Layer):
+    def __init__(self, kind="relu"):
+        self.kind = kind
+
+    def spec(self, cin):
+        return {}, cin
+
+    def apply(self, p, x):
+        return {"relu": jax.nn.relu, "relu6": jax.nn.relu6,
+                "swish": jax.nn.silu, "tanh": jnp.tanh}[self.kind](x)
+
+
+class Pool(Layer):
+    def __init__(self, kind="max", k=2, stride=None, pad="VALID"):
+        self.kind, self.k = kind, k
+        self.stride = stride or k
+        self.pad = pad
+
+    def spec(self, cin):
+        return {}, cin
+
+    def apply(self, p, x):
+        init = -jnp.inf if self.kind == "max" else 0.0
+        op = jax.lax.max if self.kind == "max" else jax.lax.add
+        y = jax.lax.reduce_window(
+            x, init, op, (1, self.k, self.k, 1),
+            (1, self.stride, self.stride, 1), self.pad)
+        if self.kind == "avg":
+            y = y / (self.k * self.k)
+        return y
+
+
+class Flatten(Layer):
+    """Flatten HxWxC -> features; spatial extent given statically."""
+
+    def __init__(self, spatial: int):
+        self.spatial = spatial
+
+    def spec(self, cin):
+        return {}, cin * self.spatial * self.spatial
+
+    def apply(self, p, x):
+        return x.reshape(x.shape[0], -1)
+
+
+class GlobalAvg(Layer):
+    def spec(self, cin):
+        return {}, cin
+
+    def apply(self, p, x):
+        return x.mean(axis=(1, 2))
+
+
+class Dense(Layer):
+    def __init__(self, cout):
+        self.cout = cout
+
+    def spec(self, cin):
+        return {"w": spec((cin, self.cout), (None, None)),
+                "b": spec((self.cout,), (None,), "zeros")}, self.cout
+
+    def apply(self, p, x):
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        return x @ p["w"] + p["b"]
+
+
+class Seq(Layer):
+    def __init__(self, *layers):
+        self.layers = [l for l in layers if l is not None]
+
+    def spec(self, cin):
+        specs = []
+        for l in self.layers:
+            s, cin = l.spec(cin)
+            specs.append(s)
+        return specs, cin
+
+    def apply(self, p, x):
+        for l, pi in zip(self.layers, p):
+            x = l.apply(pi, x)
+        return x
+
+
+class Residual(Layer):
+    """x + f(x), with an optional 1x1 projection when shape changes."""
+
+    def __init__(self, inner: Layer, stride=1, scale=1.0):
+        self.inner = inner
+        self.stride = stride
+        self.scale = scale
+
+    def spec(self, cin):
+        s, cout = self.inner.spec(cin)
+        proj = None
+        if cout != cin or self.stride != 1:
+            proj, _ = Seq(Conv(cout, 1, self.stride), BN()).spec(cin)
+            self._proj_l = Seq(Conv(cout, 1, self.stride), BN())
+        self._cin = cin
+        return {"f": s, "proj": proj if proj is not None else {}}, cout
+
+    def apply(self, p, x):
+        y = self.inner.apply(p["f"], x)
+        sc = x
+        if p["proj"]:
+            sc = self._proj_l.apply(p["proj"], x)
+        return sc + self.scale * y
+
+
+class Branches(Layer):
+    """Parallel branches, channel-concatenated (Inception / Fire)."""
+
+    def __init__(self, *branches):
+        self.branches = branches
+
+    def spec(self, cin):
+        specs, couts = [], []
+        for b in self.branches:
+            s, c = b.spec(cin)
+            specs.append(s)
+            couts.append(c)
+        return specs, sum(couts)
+
+    def apply(self, p, x):
+        return jnp.concatenate(
+            [b.apply(pi, x) for b, pi in zip(self.branches, p)], axis=-1)
+
+
+class SE(Layer):
+    """Squeeze-and-excitation."""
+
+    def __init__(self, r=4):
+        self.r = r
+
+    def spec(self, cin):
+        hid = max(4, cin // self.r)
+        return {"w1": spec((cin, hid), (None, None)),
+                "w2": spec((hid, cin), (None, None))}, cin
+
+    def apply(self, p, x):
+        s = x.mean(axis=(1, 2))
+        s = jax.nn.relu(s @ p["w1"])
+        s = jax.nn.sigmoid(s @ p["w2"])
+        return x * s[:, None, None, :]
+
+
+class Shuffle(Layer):
+    def __init__(self, groups):
+        self.g = groups
+
+    def spec(self, cin):
+        return {}, cin
+
+    def apply(self, p, x):
+        b, h, w, c = x.shape
+        return (x.reshape(b, h, w, self.g, c // self.g)
+                .swapaxes(3, 4).reshape(b, h, w, c))
+
+
+class Lambda(Layer):
+    def __init__(self, fn):
+        self.fn = fn
+
+    def spec(self, cin):
+        return {}, cin
+
+    def apply(self, p, x):
+        return self.fn(x)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def cbr(cout, k=3, stride=1, groups=1, act="relu"):
+    return Seq(Conv(cout, k, stride, groups), BN(), Act(act))
+
+
+def basic_block(cout, stride=1, se=False, scale=1.0):
+    inner = Seq(Conv(cout, 3, stride), BN(), Act(),
+                Conv(cout, 3), BN(), SE() if se else None)
+    return Seq(Residual(inner, stride, scale), Act())
+
+
+def bottleneck(cout, stride=1, expansion=4, se=False):
+    inner = Seq(Conv(cout, 1), BN(), Act(),
+                Conv(cout, 3, stride), BN(), Act(),
+                Conv(cout * expansion, 1), BN(), SE() if se else None)
+    return Seq(Residual(inner, stride), Act())
+
+
+def preact_basic(cout, stride=1):
+    return Residual(Seq(BN(), Act(), Conv(cout, 3, stride),
+                        BN(), Act(), Conv(cout, 3)), stride)
+
+
+def preact_bottleneck(cout, stride=1, expansion=4):
+    return Residual(Seq(BN(), Act(), Conv(cout, 1),
+                        BN(), Act(), Conv(cout, 3, stride),
+                        BN(), Act(), Conv(cout * expansion, 1)), stride)
+
+
+def inception(c1, c3r, c3, c5r, c5, pp):
+    return Branches(
+        cbr(c1, 1),
+        Seq(cbr(c3r, 1), cbr(c3, 3)),
+        Seq(cbr(c5r, 1), cbr(c5, 5)),
+        Seq(Pool("max", 3, 1, "SAME"), cbr(pp, 1)))
+
+
+def fire(s1, e1, e3):
+    return Seq(cbr(s1, 1), Branches(cbr(e1, 1), cbr(e3, 3)))
+
+
+def inv_residual(cout, stride, expand):
+    def block(cin):  # returns closure-free: expansion known at spec time
+        pass
+    class _Inv(Layer):
+        def spec(self, cin):
+            hid = cin * expand
+            self.seq = Seq(cbr(hid, 1, act="relu6"),
+                           Depthwise(3, stride), BN(), Act("relu6"),
+                           Conv(cout, 1), BN())
+            self.use_res = (stride == 1 and cin == cout)
+            return self.seq.spec(cin)
+
+        def apply(self, p, x):
+            y = self.seq.apply(p, x)
+            return x + y if self.use_res else y
+    return _Inv()
+
+
+def mbconv(cout, stride, expand, se=True):
+    class _MB(Layer):
+        def spec(self, cin):
+            hid = max(cin * expand, cin)
+            self.seq = Seq(cbr(hid, 1, act="swish") if expand > 1 else None,
+                           Depthwise(3, stride), BN(), Act("swish"),
+                           SE(4) if se else None,
+                           Conv(cout, 1), BN())
+            self.use_res = (stride == 1 and cin == cout)
+            return self.seq.spec(cin)
+
+        def apply(self, p, x):
+            y = self.seq.apply(p, x)
+            return x + y if self.use_res else y
+    return _MB()
+
+
+def shuffle_unit_v1(cout, stride, groups=4):
+    class _SU(Layer):
+        def spec(self, cin):
+            mid = cout // 4
+            self.body = Seq(Conv(mid, 1, groups=groups), BN(), Act(),
+                            Shuffle(groups),
+                            Depthwise(3, stride), BN(),
+                            Conv(cout if stride == 1 else cout - cin, 1,
+                                 groups=groups), BN())
+            self.stride = stride
+            self.pool = Pool("avg", 3, 2, "SAME")
+            bs, _ = self.body.spec(cin)
+            return bs, cout
+
+        def apply(self, p, x):
+            y = self.body.apply(p, x)
+            if self.stride == 1:
+                return jax.nn.relu(x + y) if x.shape == y.shape else jax.nn.relu(y)
+            sc = self.pool.apply({}, x)
+            return jax.nn.relu(jnp.concatenate([sc, y], axis=-1))
+    return _SU()
+
+
+def shuffle_unit_v2(cout, stride):
+    class _SU2(Layer):
+        def spec(self, cin):
+            half = cout // 2
+            self.stride = stride
+            self.right = Seq(cbr(half, 1), Depthwise(3, stride), BN(),
+                             cbr(half, 1))
+            rs, _ = self.right.spec(cin if stride > 1 else cin // 2)
+            if stride > 1:
+                self.left = Seq(Depthwise(3, stride), BN(), cbr(half, 1))
+                ls, _ = self.left.spec(cin)
+            else:
+                self.left = None
+                ls = {}
+            self.shuffle = Shuffle(2)
+            return {"l": ls, "r": rs}, cout
+
+        def apply(self, p, x):
+            if self.stride > 1:
+                l = self.left.apply(p["l"], x)
+                r = self.right.apply(p["r"], x)
+            else:
+                c = x.shape[-1] // 2
+                l, r = x[..., :c], x[..., c:]
+                r = self.right.apply(p["r"], r)
+            return self.shuffle.apply({}, jnp.concatenate([l, r], axis=-1))
+    return _SU2()
+
+
+def dense_block(n, growth):
+    class _DB(Layer):
+        def spec(self, cin):
+            self.units = []
+            specs = []
+            c = cin
+            for _ in range(n):
+                u = Seq(BN(), Act(), Conv(growth, 3))
+                s, _ = u.spec(c)
+                self.units.append(u)
+                specs.append(s)
+                c += growth
+            return specs, c
+
+        def apply(self, p, x):
+            for u, pi in zip(self.units, p):
+                y = u.apply(pi, x)
+                x = jnp.concatenate([x, y], axis=-1)
+            return x
+    return _DB()
+
+
+# ---------------------------------------------------------------------------
+# Networks (CIFAR-scale stem; 10-class head)
+# ---------------------------------------------------------------------------
+
+
+def _stack(block, cfgs):
+    return Seq(*[block(c, s) for c, s in cfgs])
+
+
+def _resnet(layers: Sequence[int], block="basic", width=64, se=False,
+            preact=False, scale=1.0):
+    blocks: List[Layer] = [cbr(width, 3)]
+    cmul = [1, 2, 4, 8]
+    for i, n in enumerate(layers):
+        c = width * cmul[i]
+        for j in range(n):
+            stride = 2 if (j == 0 and i > 0) else 1
+            if preact:
+                b = (preact_basic(c, stride) if block == "basic"
+                     else preact_bottleneck(c, stride))
+            elif block == "basic":
+                b = basic_block(c, stride, se=se, scale=scale)
+            else:
+                b = bottleneck(c, stride, se=se)
+            blocks.append(b)
+    blocks += [GlobalAvg(), Dense(10)]
+    return Seq(*blocks)
+
+
+def _vgg(cfg: Sequence) -> Seq:
+    blocks: List[Layer] = []
+    for v in cfg:
+        if v == "M":
+            blocks.append(Pool("max", 2))
+        else:
+            blocks.append(cbr(v, 3))
+    blocks += [GlobalAvg(), Dense(512), Act(), Dense(10)]
+    return Seq(*blocks)
+
+
+_VGG_CFG = {
+    11: [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512],
+    13: [64, 64, "M", 128, 128, "M", 256, 256, "M", 512, 512, "M", 512, 512],
+    16: [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+         512, 512, 512, "M", 512, 512, 512],
+    19: [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+         512, 512, 512, 512, "M", 512, 512, 512, 512],
+}
+
+
+def _googlenet():
+    return Seq(
+        cbr(64, 3), cbr(192, 3), Pool("max", 2),
+        inception(64, 96, 128, 16, 32, 32),
+        inception(128, 128, 192, 32, 96, 64), Pool("max", 2),
+        inception(192, 96, 208, 16, 48, 64),
+        inception(160, 112, 224, 24, 64, 64),
+        inception(128, 128, 256, 24, 64, 64),
+        inception(112, 144, 288, 32, 64, 64),
+        inception(256, 160, 320, 32, 128, 128), Pool("max", 2),
+        inception(256, 160, 320, 32, 128, 128),
+        inception(384, 192, 384, 48, 128, 128),
+        GlobalAvg(), Dense(10))
+
+
+def _inception_v3_lite():
+    def factored(c):
+        return Branches(cbr(c, 1),
+                        Seq(cbr(c, 1), Conv(c, 3), BN(), Act()),
+                        Seq(cbr(c, 1), Conv(c, 3), BN(), Act(),
+                            Conv(c, 3), BN(), Act()),
+                        Seq(Pool("avg", 3, 1, "SAME"), cbr(c, 1)))
+    return Seq(cbr(32, 3), cbr(64, 3), Pool("max", 2),
+               factored(48), factored(64), Pool("max", 2),
+               factored(96), factored(96), Pool("max", 2),
+               factored(128), GlobalAvg(), Dense(10))
+
+
+def _squeezenet():
+    return Seq(cbr(64, 3), Pool("max", 2),
+               fire(16, 64, 64), fire(16, 64, 64), Pool("max", 2),
+               fire(32, 128, 128), fire(32, 128, 128), Pool("max", 2),
+               fire(48, 192, 192), fire(48, 192, 192),
+               fire(64, 256, 256), fire(64, 256, 256),
+               Conv(10, 1), GlobalAvg())
+
+
+def _mobilenet_v1():
+    def dw(cout, stride=1):
+        return Seq(Depthwise(3, stride), BN(), Act(),
+                   Conv(cout, 1), BN(), Act())
+    return Seq(cbr(32, 3), dw(64), dw(128, 2), dw(128), dw(256, 2), dw(256),
+               dw(512, 2), *[dw(512) for _ in range(5)], dw(1024, 2),
+               dw(1024), GlobalAvg(), Dense(10))
+
+
+def _mobilenet_v2():
+    cfg = [(16, 1, 1), (24, 1, 6), (24, 1, 6), (32, 2, 6), (32, 1, 6),
+           (32, 1, 6), (64, 2, 6), (64, 1, 6), (64, 1, 6), (64, 1, 6),
+           (96, 1, 6), (96, 1, 6), (96, 1, 6), (160, 2, 6), (160, 1, 6),
+           (160, 1, 6), (320, 1, 6)]
+    return Seq(cbr(32, 3), *[inv_residual(c, s, e) for c, s, e in cfg],
+               cbr(1280, 1), GlobalAvg(), Dense(10))
+
+
+def _shufflenet_v1():
+    return Seq(cbr(24, 3),
+               shuffle_unit_v1(240, 2), *[shuffle_unit_v1(240, 1)] * 3,
+               shuffle_unit_v1(480, 2), *[shuffle_unit_v1(480, 1)] * 7,
+               shuffle_unit_v1(960, 2), *[shuffle_unit_v1(960, 1)] * 3,
+               GlobalAvg(), Dense(10))
+
+
+def _shufflenet_v2():
+    return Seq(cbr(24, 3),
+               shuffle_unit_v2(116, 2), *[shuffle_unit_v2(116, 1)] * 3,
+               shuffle_unit_v2(232, 2), *[shuffle_unit_v2(232, 1)] * 7,
+               shuffle_unit_v2(464, 2), *[shuffle_unit_v2(464, 1)] * 3,
+               cbr(1024, 1), GlobalAvg(), Dense(10))
+
+
+def _densenet63():
+    return Seq(cbr(32, 3),
+               dense_block(6, 16), cbr(64, 1), Pool("avg", 2),
+               dense_block(8, 16), cbr(96, 1), Pool("avg", 2),
+               dense_block(8, 16), cbr(128, 1), Pool("avg", 2),
+               dense_block(6, 16), GlobalAvg(), Dense(10))
+
+
+def _nin():
+    return Seq(cbr(192, 5), cbr(160, 1), cbr(96, 1), Pool("max", 2),
+               cbr(192, 5), cbr(192, 1), cbr(192, 1), Pool("avg", 2),
+               cbr(192, 3), cbr(192, 1), Conv(10, 1), GlobalAvg())
+
+
+def _resnext29():
+    def block(cout, stride=1):
+        inner = Seq(Conv(cout // 2, 1), BN(), Act(),
+                    Conv(cout // 2, 3, stride, groups=8), BN(), Act(),
+                    Conv(cout, 1), BN())
+        return Seq(Residual(inner, stride), Act())
+    return Seq(cbr(64, 3),
+               *[block(256, 2 if i == 0 else 1) for i in range(3)],
+               *[block(512, 2 if i == 0 else 1) for i in range(3)],
+               *[block(1024, 2 if i == 0 else 1) for i in range(3)],
+               GlobalAvg(), Dense(10))
+
+
+def _efficientnet_lite0():
+    cfg = [(16, 1, 1), (24, 2, 6), (24, 1, 6), (40, 2, 6), (40, 1, 6),
+           (80, 2, 6), (80, 1, 6), (80, 1, 6), (112, 1, 6), (112, 1, 6),
+           (192, 2, 6), (192, 1, 6), (192, 1, 6), (320, 1, 6)]
+    return Seq(cbr(32, 3, act="swish"),
+               *[mbconv(c, s, e) for c, s, e in cfg],
+               cbr(1280, 1, act="swish"), GlobalAvg(), Dense(10))
+
+
+def _convmixer_lite(dim=256, depth=8, k=9):
+    def mixer():
+        return Seq(Residual(Seq(Depthwise(k, 1), Act("swish"), BN())),
+                   Conv(dim, 1), Act("swish"), BN())
+    return Seq(Conv(dim, 2, 2), Act("swish"), BN(),
+               *[mixer() for _ in range(depth)], GlobalAvg(), Dense(10))
+
+
+def _lenet5(image=32):
+    s1 = (image - 4) // 2
+    s2 = (s1 - 4) // 2
+    return Seq(Conv(6, 5, bias=True, pad="VALID"), Act("tanh"), Pool("avg", 2),
+               Conv(16, 5, bias=True, pad="VALID"), Act("tanh"), Pool("avg", 2),
+               Flatten(s2),
+               Dense(120), Act("tanh"), Dense(84), Act("tanh"), Dense(10))
+
+
+def _alexnet(image=32):
+    return Seq(cbr(64, 5), Pool("max", 2), cbr(192, 5), Pool("max", 2),
+               cbr(384, 3), cbr(256, 3), cbr(256, 3), Pool("max", 2),
+               Flatten(image // 8),
+               Dense(1024), Act(), Dense(512), Act(), Dense(10))
+
+
+ZOO: Dict[str, Callable[[], Seq]] = {
+    "lenet5": _lenet5,  # image-aware
+    "alexnet": _alexnet,
+    "vgg11": lambda: _vgg(_VGG_CFG[11]),
+    "vgg13": lambda: _vgg(_VGG_CFG[13]),
+    "vgg16": lambda: _vgg(_VGG_CFG[16]),
+    "vgg19": lambda: _vgg(_VGG_CFG[19]),
+    "resnet18": lambda: _resnet([2, 2, 2, 2]),
+    "resnet34": lambda: _resnet([3, 4, 6, 3]),
+    "resnet50": lambda: _resnet([3, 4, 6, 3], "bottleneck"),
+    "resnet101": lambda: _resnet([3, 4, 23, 3], "bottleneck"),
+    "resnet152": lambda: _resnet([3, 8, 36, 3], "bottleneck"),
+    "preact_resnet18": lambda: _resnet([2, 2, 2, 2], preact=True),
+    "preact_resnet152": lambda: _resnet([3, 8, 36, 3], "bottleneck",
+                                        preact=True),
+    "se_resnet18": lambda: _resnet([2, 2, 2, 2], se=True),
+    "se_resnet34": lambda: _resnet([3, 4, 6, 3], se=True),
+    "googlenet": _googlenet,
+    "inception_v3_lite": _inception_v3_lite,
+    "squeezenet": _squeezenet,
+    "mobilenet_v1": _mobilenet_v1,
+    "mobilenet_v2": _mobilenet_v2,
+    "shufflenet_v1": _shufflenet_v1,
+    "shufflenet_v2": _shufflenet_v2,
+    "densenet63": _densenet63,
+    "nin": _nin,
+    "wideresnet16_4": lambda: _resnet([2, 2, 2], width=64 * 4 // 4),
+    "stochastic_depth34": lambda: _resnet([3, 4, 6, 3], scale=0.8),
+    "resnext29": _resnext29,
+    "efficientnet_lite0": _efficientnet_lite0,
+    "convmixer_lite": _convmixer_lite,
+}
+
+# the paper's Fig.13 zero-shot holdout — identical families
+UNSEEN = ("inception_v3_lite", "stochastic_depth34", "resnet50",
+          "preact_resnet152", "se_resnet34")
+
+LIGHTWEIGHT = ("squeezenet", "mobilenet_v1", "mobilenet_v2",
+               "shufflenet_v1", "shufflenet_v2")  # paper's 1x1-conv group
+
+
+@dataclasses.dataclass
+class ZooModel:
+    name: str
+    net: Seq
+    cin: int
+
+    def init(self, key, image=32):
+        s, _ = self.net.spec(self.cin)
+        return init_params(s, key)
+
+    def apply(self, params, x):
+        return self.net.apply(params, x)
+
+    def layer_count(self) -> int:
+        def count(l) -> int:
+            if isinstance(l, (Conv, Dense)):
+                return 1
+            inner = []
+            if isinstance(l, Seq):
+                inner = l.layers
+            elif isinstance(l, Residual):
+                inner = [l.inner]
+                if getattr(l, "_proj_l", None) is not None:
+                    inner.append(l._proj_l)
+            elif isinstance(l, Branches):
+                inner = list(l.branches)
+            else:  # closure-built blocks expose their sub-layers as attrs
+                for attr in ("seq", "body", "left", "right", "units"):
+                    v = getattr(l, attr, None)
+                    if isinstance(v, Layer):
+                        inner.append(v)
+                    elif isinstance(v, list):
+                        inner.extend(v)
+            return sum(count(i) for i in inner)
+        return count(self.net)
+
+
+def build_zoo_model(name: str, channels: int = 3, image: int = 32) -> ZooModel:
+    import inspect
+    builder = ZOO[name]
+    if "image" in inspect.signature(builder).parameters:
+        net = builder(image=image)
+    else:
+        net = builder()
+    m = ZooModel(name, net, channels)
+    # Materialize block inner layers (some blocks build layers in spec()).
+    m.net.spec(channels)
+    return m

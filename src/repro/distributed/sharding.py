@@ -1,0 +1,196 @@
+"""Logical-axis -> mesh-axis sharding resolution.
+
+Every parameter / cache / activation tensor carries a tuple of *logical*
+axis names (see ``repro.models.module``). A :class:`ShardingRules` maps
+logical names to mesh axes; :func:`resolve_spec` turns (logical axes,
+shape, mesh) into a concrete ``PartitionSpec``:
+
+- mesh axes absent from the mesh (e.g. ``pod`` on the single-pod mesh) are
+  dropped;
+- a dim is sharded only when evenly divisible, or when GSPMD's padding
+  waste ``ceil(d/n)*n/d`` stays within ``pad_tolerance`` (default 4/3 —
+  admits 40 heads or 24 heads on a 16-way model axis at <=33% attention-
+  only padding, rejects pathological cases like 2 kv-heads on 16 shards,
+  which fall back to replication);
+- a mesh axis is consumed at most once per tensor, first (leftmost
+  logical dim) wins — e.g. MoE kernels (experts, embed, ..., mlp) take
+  expert parallelism over ``model`` and leave ``mlp`` replicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": (),
+    "mlp": ("model",),
+    "heads": ("model",),        # even head counts (SSM heads, 32/64-head attn)
+    "heads_flat": ("model",),   # flattened H*hd projections (always divisible)
+    "kv_flat": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "seq": (),
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks is sharded over `model` on the sequence dim, cutting the
+    # saved scan-carry activations 16x; GSPMD turns the surrounding
+    # all-reduces into the matching all-gather/reduce-scatter pairs.
+    "act_seq": ("model",),
+    "cache_seq": ("model",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    # pad_tolerance 1.0 (strict) for params/caches/inputs: jit in_shardings
+    # require even division. make_sharder relaxes it for activation
+    # constraints, where GSPMD pads transparently.
+    rules: Dict[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    pad_tolerance: float = 1.0
+
+    def replace(self, **updates) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(updates)
+        return dataclasses.replace(self, rules=merged)
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_spec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                 mesh: Mesh, rules: ShardingRules) -> P:
+    sizes = _axis_sizes(mesh)
+    used = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        entry = rules.rules.get(name, ()) if name else ()
+        mesh_axes = tuple(a for a in entry if a in sizes and a not in used)
+        if not mesh_axes:
+            out.append(None)
+            continue
+        n = math.prod(sizes[a] for a in mesh_axes)
+        if n <= 1:
+            out.append(None)
+            continue
+        waste = (-(-dim // n) * n) / max(dim, 1)
+        if dim % n != 0 and waste > rules.pad_tolerance:
+            out.append(None)
+            continue
+        used.update(mesh_axes)
+        out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shape_tree, rules: ShardingRules):
+    """Parallel trees of logical axes + shapes -> NamedSharding tree."""
+    def leaf(axes, shp):
+        shape = shp.shape if hasattr(shp, "shape") else tuple(shp)
+        return NamedSharding(mesh, resolve_spec(tuple(axes), shape, mesh, rules))
+    return jax.tree.map(leaf, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+# Activation constraint points used inside models (name -> logical axes).
+_ACT_AXES = {
+    "acts": ("batch", "act_seq", "embed"),
+    "acts_qkv": ("batch", "seq", "heads", "head_dim"),
+    "acts_kv": ("batch", "seq", "kv_heads", "head_dim"),
+    "acts_kv_repl": ("batch", "seq", None, "head_dim"),  # batch-only
+    "moe_disp": ("batch", None, "experts", None),   # (G, gs, E, C)
+    "moe_xe": ("batch", "experts", None, None),     # (G, E, C, D)
+    "decode_scores": ("batch", None, None, "cache_seq"),  # (B, H, 1, S)
+    "decode_scores5": ("batch", None, None, None, "cache_seq"),  # grouped
+    "logits": ("batch", "seq", "vocab"),
+}
+
+
+# Activation-sharding schemes (see EXPERIMENTS.md §Perf):
+#   "sp"       — residual stream sharded over model on the seq dim
+#                (Megatron sequence parallelism); attention internals left
+#                to GSPMD propagation (no q/k/v constraints).
+#   "sp_heads" — sp + forced head sharding of q/k/v (induces reshards
+#                between seq- and head-sharded layouts).
+#   "tp"       — replicated-seq residual + head-sharded attention
+#                (classic tensor parallelism; high activation memory).
+#   "dp"       — no tensor parallelism: the model axis joins the batch
+#                axis (256-way DP) and parameters are FSDP-sharded over
+#                `model` (GSPMD all-gathers them per scan step). The right
+#                choice for models whose per-layer weights are smaller
+#                than the per-layer activation traffic TP would move.
+SCHEMES = ("sp", "sp_heads", "tp", "dp")
+
+
+def scheme_rules(scheme: str, rules: Optional[ShardingRules] = None) -> ShardingRules:
+    rules = rules or ShardingRules()
+    if scheme == "tp":
+        return rules.replace(act_seq=())
+    if scheme == "dp":
+        # vocab stays model-sharded: a 200k-vocab fp32 logits tensor must
+        # never materialize unsharded (phi4: 25 GiB of softmax temps)
+        return rules.replace(
+            batch=("pod", "data", "model"), act_seq=(),
+            mlp=(), heads=(), heads_flat=(), kv_flat=(),
+            experts=(), fsdp=("model",))
+    return rules
+
+
+def fsdp_axes(axes_tree, shape_tree, mesh: Mesh):
+    """Rewrite param logical axes for the "dp" scheme: shard the first
+    model-axis-divisible dim of every tensor as "fsdp" (ZeRO-3 over the
+    model axis; GSPMD inserts the per-layer all-gathers)."""
+    sizes = _axis_sizes(mesh)
+    n = sizes.get("model", 1)
+
+    def leaf(axes, shp):
+        shape = shp.shape if hasattr(shp, "shape") else tuple(shp)
+        if n <= 1:
+            return axes
+        for i, (name, dim) in enumerate(zip(axes, shape)):
+            if dim % n == 0 and dim >= n:
+                new = list(axes)
+                new[i] = "fsdp"
+                return tuple(new)
+        return axes
+
+    return jax.tree.map(
+        leaf, axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def make_sharder(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None,
+                 scheme: str = "sp"):
+    """Returns the ``sharder(name, shape)`` hook consumed by StackModel."""
+    if mesh is None:
+        return None
+    assert scheme in SCHEMES, scheme
+    rules = scheme_rules(scheme, rules)
+    rules = dataclasses.replace(rules, pad_tolerance=4.0 / 3.0)
+    names = ({"acts", "acts_kv_repl", "moe_disp", "moe_xe", "decode_scores",
+              "decode_scores5"}
+             if scheme in ("sp", "dp") else set(_ACT_AXES))
+
+    def sharder(name: str, shape: Tuple[int, ...]):
+        axes = _ACT_AXES.get(name)
+        if name not in names or axes is None or len(axes) != len(shape):
+            return None
+        return NamedSharding(mesh, resolve_spec(axes, shape, mesh, rules))
+
+    return sharder
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

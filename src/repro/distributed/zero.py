@@ -1,0 +1,56 @@
+"""ZeRO-1 optimizer-state partitioning over the data(+pod) axes.
+
+Parameters are tensor-parallel over ``model`` only; their optimizer
+moments and fp32 master copies are *additionally* sharded over the data
+axes — each data shard owns a slice of the optimizer state, which is the
+ZeRO-1 memory split (state bytes / (data x pod)). GSPMD materializes the
+reduce-scatter/all-gather pattern implied by the sharding difference.
+
+``zero_axes`` rewrites a logical-axes tree: for each tensor it finds the
+first dim that is not already sharded and whose size divides the combined
+data-axis extent, and assigns it the pseudo-logical name ``"zero"``
+(ruled to ``("pod", "data")``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingRules, _axis_sizes
+
+
+def zero_rules(rules: ShardingRules) -> ShardingRules:
+    return rules.replace(zero=("pod", "data"))
+
+
+def zero_axes(axes_tree, shape_tree, mesh: Mesh, rules: ShardingRules):
+    """Rewrite logical axes so optimizer state also shards over data axes."""
+    sizes = _axis_sizes(mesh)
+    dp = math.prod(sizes.get(a, 1) for a in ("pod", "data"))
+
+    def leaf(axes: Tuple, shp):
+        shape = shp.shape if hasattr(shp, "shape") else tuple(shp)
+        if dp <= 1:
+            return axes
+        best = None
+        for i, (name, dim) in enumerate(zip(axes, shape)):
+            sharded = bool(name and rules.rules.get(name))
+            if sharded:
+                continue
+            if dim % dp == 0:
+                best = i
+                break
+        if best is None:
+            return axes
+        new = list(axes)
+        new[best] = "zero"
+        return tuple(new)
+
+    return jax.tree.map(
+        leaf, axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

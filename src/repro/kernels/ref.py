@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q (BH,Sq,d), k/v (BH,Sk,d) -> (BH,Sq,d); fp32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(xb, dt, a_neg, bmat, cmat, chunk: int):
+    """Same contract as kernels.ssd_scan.ssd_scan_bhlp: xb (B,H,L,P)."""
+    from repro.models.ssm import ssd_chunked_ref
+    y, _ = ssd_chunked_ref(jnp.moveaxis(xb, 1, 2), jnp.moveaxis(dt, 1, 2),
+                           a_neg, bmat, cmat, chunk)
+    return jnp.moveaxis(y, 2, 1)
+
+
+def rmsnorm_ref(x, gain, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * gain.astype(jnp.float32)).astype(x.dtype)

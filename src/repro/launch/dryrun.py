@@ -1,0 +1,203 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first statements — before any other import (jax locks the
+device count at first init):
+"""
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis import roofline as rl  # noqa: E402
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serve import engine  # noqa: E402
+from repro.train import optimizer as opt_lib  # noqa: E402
+from repro.train import step as step_lib  # noqa: E402
+
+
+def input_specs(arch: str, shape_name: str = "train_4k") -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Weak-type-correct, shardable, no device allocation. Training cells get
+    {tokens, labels}; prefill cells {tokens}; decode cells {tokens, pos}.
+    Modality frontends are stubs: VLM cells add precomputed patch
+    embeddings, audio cells add precomputed frame embeddings.
+    """
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    b = shp.global_batch
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shp.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, shp.seq_len), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, shp.seq_len), jnp.int32)}
+    elif shp.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, shp.seq_len), jnp.int32)}
+    else:  # decode: one new token against a seq_len cache
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                 "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    if cfg.cross_every and shp.kind != "decode":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_seq, cfg.d_model), dt)
+    if cfg.is_encoder_decoder and shp.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.audio_seq, cfg.d_model), dt)
+    return specs
+
+
+# Giant archs: parameters FSDP-shard over (pod, data) in addition to
+# model-axis TP (arctic's 477B cannot fit at TP-16), and arctic trains
+# masterless (pure-bf16 AdamW with stochastic rounding on TPU): master
+# fp32 alone would be 477e9*4/256 = 7.5 GiB/device.
+FSDP_PARAMS = {"arctic-480b", "llama-3.2-vision-90b"}
+NO_MASTER = {"arctic-480b"}
+# Gradient accumulation (microbatching) for train cells whose activation
+# working set exceeds HBM at full batch — the standard production lever.
+# (dp-scheme models excluded: their grad accumulators are replicated
+# fp32 trees, so accumulation *adds* memory — measured in §Perf)
+TRAIN_ACCUM = {"llama-3.2-vision-90b": 4, "arctic-480b": 4,
+               "qwen2.5-32b": 4, "jamba-v0.1-52b": 4,
+               "moonshot-v1-16b-a3b": 2}
+
+
+def _lower_cell(arch: str, shape_name: str, mesh, rules: shd.ShardingRules,
+                opt_cfg: Optional[opt_lib.OptConfig] = None,
+                donate: bool = True, scheme: str = "sp"):
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    rules = shd.scheme_rules(scheme, rules)
+    fsdp = arch in FSDP_PARAMS
+    model = build_model(cfg, sharder=shd.make_sharder(mesh, rules, scheme))
+    specs = input_specs(arch, shape_name)
+    batch_sh = step_lib.batch_shardings(mesh, specs, rules)
+
+    if shp.kind == "train":
+        opt_cfg = opt_cfg or opt_lib.OptConfig(
+            moment_dtype="bfloat16", keep_master=arch not in NO_MASTER)
+        fn = step_lib.make_train_step(model, opt_cfg,
+                                      accum=TRAIN_ACCUM.get(arch, 1))
+        state_shape = step_lib.state_shapes(model, opt_cfg)
+        state_sh = step_lib.state_shardings(model, opt_cfg, mesh, rules,
+                                            scheme=scheme, fsdp_params=fsdp)
+        jf = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,) if donate else ())
+        with mesh:
+            lowered = jf.lower(state_shape, specs)
+    elif shp.kind == "prefill":
+        fn = engine.make_prefill_step(model)
+        p_sh = engine.param_shardings(model, mesh, rules, fsdp_params=fsdp)
+        c_sh, _ = engine.cache_shardings(model, mesh, shp.global_batch,
+                                         shp.seq_len, rules)
+        jf = jax.jit(fn, in_shardings=(p_sh, batch_sh),
+                     out_shardings=(NamedSharding(mesh, P()), c_sh))
+        with mesh:
+            lowered = jf.lower(model.init_shape(), specs)
+    else:  # decode
+        fn = engine.make_decode_step(model)
+        p_sh = engine.param_shardings(model, mesh, rules, fsdp_params=fsdp)
+        c_sh, c_shape = engine.cache_shardings(model, mesh, shp.global_batch,
+                                               shp.seq_len, rules)
+        jf = jax.jit(fn,
+                     in_shardings=(p_sh, c_sh, batch_sh["tokens"],
+                                   batch_sh["pos"]),
+                     donate_argnums=(1,) if donate else ())
+        with mesh:
+            lowered = jf.lower(model.init_shape(), c_shape,
+                               specs["tokens"], specs["pos"])
+    return model, lowered
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                rules: Optional[shd.ShardingRules] = None,
+                verbose: bool = True, scheme: str = "sp") -> Dict:
+    """Lower + compile one cell; return roofline record (§Dry-run/§Roofline)."""
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shp)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+    rules = rules or shd.ShardingRules()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    model, lowered = _lower_cell(arch, shape_name, mesh, rules, scheme=scheme)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    roof = rl.analyze(compiled)
+    mflops = rl.model_flops(cfg, shp, model.param_count(),
+                            model.param_count(active_only=True)) / n_dev
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "devices": n_dev, "status": "ok", "scheme": scheme,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        **roof.summary(mflops),
+    }
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[dryrun] {arch} x {shape_name} mesh={mesh.devices.shape}")
+        print(f"  memory_analysis: args={rec['argument_gib']:.2f}GiB "
+              f"temp={rec['temp_gib']:.2f}GiB peak={rec['peak_hbm_gib']:.2f}GiB")
+        print(f"  cost_analysis: flops/dev={roof.flops:.3e} "
+              f"bytes/dev={roof.bytes_accessed:.3e}")
+        print(f"  collectives: { {k: int(v['count']) for k, v in roof.collectives.items()} }")
+        print(f"  roofline: compute={roof.t_compute*1e3:.2f}ms "
+              f"memory={roof.t_memory*1e3:.2f}ms "
+              f"collective={roof.t_collective*1e3:.2f}ms "
+              f"-> bound by {roof.bottleneck}")
+        print(f"  model_flops/dev={mflops:.3e} useful={rec['useful_flop_fraction']:.3f} "
+              f"mfu_bound={rec.get('mfu_bound', 0):.3f}")
+        del ma
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--scheme", default="sp", help="sp | sp_heads | tp")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                try:
+                    rec = dryrun_cell(arch, shape_name, multi_pod=mp,
+                                      scheme=args.scheme)
+                except Exception as e:  # a failure here is a sharding bug
+                    rec = {"arch": arch, "shape": shape_name, "multi_pod": mp,
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                    print(f"[dryrun] FAILED {arch} x {shape_name} mp={mp}: "
+                          f"{rec['error'][:500]}", file=sys.stderr)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

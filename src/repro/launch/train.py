@@ -1,0 +1,90 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this container the launcher runs reduced configs on the host devices;
+on a real cluster the same entry point runs the full config on the
+production mesh (the dry-run proves those lower+compile). With
+``--predict``, DNNAbacus admission control estimates step time and peak
+memory for the requested config *before* allocating anything and refuses
+jobs predicted to OOM — the paper's scheduling application wired into the
+launcher.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced smoke size)")
+    ap.add_argument("--data", type=int, default=1, help="data-parallel axis")
+    ap.add_argument("--model-par", type=int, default=1, help="model axis")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--no-zero", action="store_true")
+    ap.add_argument("--predict", action="store_true",
+                    help="DNNAbacus admission control before launch")
+    ap.add_argument("--predictor-path", default="artifacts/abacus")
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, reduced_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.train import optimizer as opt_lib
+    from repro.train.loop import LoopConfig, Trainer
+    from repro.distributed import sharding as shd
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = reduced_config(cfg)
+    mesh = (make_host_mesh(args.data, args.model_par)
+            if args.data * args.model_par > 1 else None)
+    model = build_model(cfg, sharder=shd.make_sharder(mesh))
+
+    predicted = None
+    if args.predict:
+        from repro.core.predictor import DNNAbacus
+        if os.path.exists(args.predictor_path + ".json"):
+            abacus = DNNAbacus.load(args.predictor_path)
+            est = abacus.predict_config(cfg, args.batch, args.seq)
+            predicted = est["time_s"]
+            print(f"[abacus] predicted step time {est['time_s']*1e3:.1f} ms, "
+                  f"peak memory {est['memory_bytes']/2**30:.2f} GiB")
+            budget = est.get("hbm_budget", 34 * 2**30)
+            if est["memory_bytes"] > budget:
+                print("[abacus] REFUSED: predicted OOM "
+                      f"({est['memory_bytes']/2**30:.1f} GiB > "
+                      f"{budget/2**30:.1f} GiB)", file=sys.stderr)
+                return 2
+        else:
+            print("[abacus] no fitted predictor found; run "
+                  "benchmarks/bench_mre.py or examples/predict_and_schedule.py "
+                  "first", file=sys.stderr)
+
+    loop_cfg = LoopConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                          ckpt_dir=args.ckpt_dir, accum=args.accum,
+                          zero=not args.no_zero,
+                          predicted_step_s=predicted)
+    trainer = Trainer(model, opt_lib.OptConfig(), loop_cfg, mesh=mesh)
+    log = trainer.run()
+    for rec in log:
+        print(json.dumps(rec))
+    if args.log:
+        trainer.write_log(args.log)
+    print(f"final loss: {log[-1]['loss']:.4f} "
+          f"(retries={trainer.runner.retries}, "
+          f"stragglers={trainer.runner.stragglers})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+from repro.models.api import build_model  # noqa: F401

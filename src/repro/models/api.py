@@ -1,0 +1,12 @@
+"""Public model-construction API."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.configs.base import ModelConfig
+from repro.models.stack import StackModel
+
+
+def build_model(cfg: ModelConfig, sharder: Optional[Callable] = None) -> StackModel:
+    return StackModel(cfg, sharder=sharder)

@@ -1,0 +1,108 @@
+"""Minimal parameter-spec module system.
+
+Modules are plain functions. A module's parameters are described by a pytree
+of :class:`ParamSpec` leaves (shape + logical axis names + initializer).
+``init_params`` materializes the tree with real arrays; ``logical_axes``
+extracts the parallel tree of logical-axis tuples consumed by
+``repro.distributed.sharding`` to build ``PartitionSpec`` trees.
+
+Keeping specs and initialization in one place guarantees the sharding tree
+can never drift from the parameter tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (str) or None per dim
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: Optional[float] = None
+    dtype: Optional[Any] = None  # overrides the model dtype (e.g. fp32 norms)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape: Sequence[int], axes: Sequence[Optional[str]], init: str = "normal",
+         scale: Optional[float] = None, dtype: Optional[Any] = None) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(shape: tuple) -> int:
+    # Convention: last dim is fan-out, everything before is fan-in.
+    if len(shape) <= 1:
+        return max(1, shape[0] if shape else 1)
+    n = 1
+    for d in shape[:-1]:
+        n *= d
+    return max(1, n)
+
+
+def _init_leaf(ps: ParamSpec, key, dtype) -> jax.Array:
+    dt = ps.dtype or dtype
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, dt)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, dt)
+    if ps.init == "embed":
+        sc = ps.scale if ps.scale is not None else 1.0
+        return (jax.random.normal(key, ps.shape, jnp.float32) * sc).astype(dt)
+    # dense-kernel initializers: truncated-normal-ish scaled by fan-in
+    sc = ps.scale if ps.scale is not None else 1.0 / math.sqrt(_fan_in(ps.shape))
+    if ps.init == "small":
+        sc = sc * 0.1
+    return (jax.random.normal(key, ps.shape, jnp.float32) * sc).astype(dt)
+
+
+def init_params(spec_tree: Pytree, key, dtype=jnp.float32) -> Pytree:
+    """Materialize a ParamSpec tree into arrays."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(ps, k, dtype) for ps, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def logical_axes(spec_tree: Pytree) -> Pytree:
+    """ParamSpec tree -> tree of logical-axis tuples (same structure)."""
+    return jax.tree.map(lambda ps: ps.axes, spec_tree, is_leaf=is_spec)
+
+
+def shape_tree(spec_tree: Pytree, dtype=jnp.float32) -> Pytree:
+    """ParamSpec tree -> ShapeDtypeStruct tree (no allocation)."""
+    def leaf(ps: ParamSpec):
+        return jax.ShapeDtypeStruct(ps.shape, ps.dtype or dtype)
+    return jax.tree.map(leaf, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree: Pytree, n: int, axis_name: Optional[str] = None) -> Pytree:
+    """Prepend a stacking dim (e.g. scan-over-layers periods) to every leaf."""
+    def leaf(ps: ParamSpec):
+        return ParamSpec((n,) + ps.shape, (axis_name,) + ps.axes, ps.init,
+                         ps.scale, ps.dtype)
+    return jax.tree.map(leaf, spec_tree, is_leaf=is_spec)
+
+
+def count_params(tree: Pytree) -> int:
+    """Number of scalar parameters in an array / ShapeDtypeStruct / spec tree."""
+    def leaf_size(x):
+        if isinstance(x, ParamSpec):
+            return math.prod(x.shape)
+        return math.prod(x.shape)
+    return sum(leaf_size(x) for x in jax.tree.leaves(tree, is_leaf=is_spec))

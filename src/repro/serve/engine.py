@@ -1,0 +1,90 @@
+"""Serving: prefill / decode step factories and cache shardings.
+
+``decode_step`` is the unit the ``decode_*`` / ``long_*`` dry-run cells
+lower: one new token against a KV (or SSD state) cache of the stated
+length. The KV cache is sharded batch->data and cache_seq->model — the
+flash-decoding split: each model shard attends over its sequence slice
+and GSPMD combines the partial softmax statistics.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return decode_step
+
+
+def param_shardings(model, mesh: Mesh,
+                    rules: Optional[shd.ShardingRules] = None,
+                    fsdp_params: bool = False):
+    rules = rules or shd.ShardingRules()
+    axes = model.param_axes()
+    shapes = model.init_shape()
+    if fsdp_params:  # giant models: params sharded over data axes too
+        from repro.distributed import zero as zero_lib
+        axes = zero_lib.zero_axes(axes, shapes, mesh, rules)
+        rules = zero_lib.zero_rules(rules)
+    return shd.tree_shardings(mesh, axes, shapes, rules)
+
+
+def cache_shardings(model, mesh: Mesh, batch: int, seq: int,
+                    rules: Optional[shd.ShardingRules] = None):
+    rules = rules or shd.ShardingRules()
+    shapes, axes = model.cache_spec(batch, seq)
+    return shd.tree_shardings(mesh, axes, shapes, rules), shapes
+
+
+class DecodeEngine:
+    """Minimal batched serving engine (examples / integration tests).
+
+    Holds params + cache on device, runs greedy decode with per-request
+    positions — the single-host stand-in for the continuous-batching
+    frontend described in DESIGN.md.
+    """
+
+    def __init__(self, model, params, batch: int, max_seq: int, mesh=None):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.cache = model.init_cache(batch, max_seq)
+        self.pos = jnp.zeros((batch,), jnp.int32)
+        self._decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+    def prefill(self, batch_inputs):
+        logits, cache = jax.jit(make_prefill_step(self.model))(
+            self.params, batch_inputs)
+        self.cache = cache
+        self.pos = jnp.full((self.batch,), batch_inputs["tokens"].shape[1],
+                            jnp.int32)
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    def step(self, tokens):
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          tokens[:, None], self.pos)
+        self.pos = self.pos + 1
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    def generate(self, first_tokens, steps: int):
+        toks = first_tokens
+        out = [toks]
+        for _ in range(steps):
+            toks = self.step(toks)
+            out.append(toks)
+        return jnp.stack(out, axis=1)

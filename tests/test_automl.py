@@ -1,0 +1,76 @@
+"""AutoML-lite: trees, forests, boosting, ensembling, serialization."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.automl.models import (ExtraTreesRegressor,
+                                      GradientBoostingRegressor,
+                                      KNNRegressor, RandomForestRegressor,
+                                      RidgeRegressor, model_from_dict)
+from repro.core.automl.search import fit_automl
+from repro.core.automl.tree import DecisionTreeRegressor, TreeConfig
+from repro.core.features import mre
+
+
+def _data(n=300, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, (n, 8))
+    y = 3 * x[:, 0] + np.where(x[:, 1] > 0.5, 2.0, -1.0) + 0.5 * x[:, 2] ** 2
+    return x, y
+
+
+def test_tree_fits_step_function():
+    x, y = _data()
+    t = DecisionTreeRegressor(TreeConfig(max_depth=8)).fit(x, y)
+    pred = t.predict(x)
+    assert np.mean((pred - y) ** 2) < 0.05 * np.var(y)
+
+
+def test_tree_respects_max_depth():
+    x, y = _data()
+    t = DecisionTreeRegressor(TreeConfig(max_depth=1)).fit(x, y)
+    assert len(np.unique(t.predict(x))) <= 2
+
+
+@pytest.mark.parametrize("cls,kw,factor", [
+    (RandomForestRegressor, {"n_trees": 15}, 0.7),
+    # random-threshold splits need more trees to average out on 240 points
+    (ExtraTreesRegressor, {"n_trees": 40}, 0.85),
+    (GradientBoostingRegressor, {"n_stages": 60}, 0.7),
+    (RidgeRegressor, {}, 0.7),
+    (KNNRegressor, {}, 0.7),
+])
+def test_models_beat_mean_and_roundtrip(cls, kw, factor):
+    x, y = _data()
+    xt, yt = x[:240], y[:240]
+    xv, yv = x[240:], y[240:]
+    m = cls(**kw).fit(xt, yt)
+    mse = np.mean((m.predict(xv) - yv) ** 2)
+    base = np.mean((np.mean(yt) - yv) ** 2)
+    assert mse < factor * base, (cls.KIND, mse, base)
+    m2 = model_from_dict(m.to_dict())
+    np.testing.assert_allclose(m2.predict(xv), m.predict(xv), rtol=1e-9)
+
+
+def test_fit_automl_selects_and_predicts_positive():
+    x, y = _data()
+    y = np.exp(y)  # strictly positive target, wide range
+    ens = fit_automl(x[:240], y[:240],
+                     candidates=[RandomForestRegressor(n_trees=10),
+                                 RidgeRegressor()])
+    pred = ens.predict(x[240:])
+    assert (pred > 0).all()
+    assert mre(pred, y[240:]) < 0.5
+    assert len(ens.leaderboard) == 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_property_tree_predictions_within_target_range(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(50, 4))
+    y = rng.normal(size=50)
+    t = DecisionTreeRegressor(TreeConfig(max_depth=6)).fit(x, y)
+    p = t.predict(rng.normal(size=(20, 4)))
+    assert p.min() >= y.min() - 1e-9 and p.max() <= y.max() + 1e-9

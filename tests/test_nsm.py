@@ -1,0 +1,108 @@
+"""NSM extraction: paper's construction semantics + properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nsm import NSMFeaturizer, nsm_edges, nsm_of_fn
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_chain_counts():
+    """A sequential chain of K distinct ops yields exactly K-1 edges."""
+    def f(x):
+        a = jnp.tanh(x)       # tanh
+        b = jnp.exp(a)        # exp
+        c = jnp.sin(b)        # sin
+        return c
+    e = nsm_of_fn(f, _sds(4))
+    assert e == {("tanh", "exp"): 1.0, ("exp", "sin"): 1.0}
+
+
+def test_fanout_counts_each_consumer():
+    def f(x):
+        a = jnp.tanh(x)
+        return jnp.exp(a) + jnp.sin(a)
+    e = nsm_of_fn(f, _sds(4))
+    assert e[("tanh", "exp")] == 1.0
+    assert e[("tanh", "sin")] == 1.0
+    assert e[("exp", "add")] == 1.0
+    assert e[("sin", "add")] == 1.0
+
+
+def test_scan_multiplies_body_edges():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    e = nsm_of_fn(f, _sds(4, 8), _sds(8, 8))
+    assert e[("dot", "tanh")] == 7.0
+    assert e[("tanh", "dot")] == 6.0  # carry feedback edges
+
+
+def test_transparent_calls():
+    def f(x):
+        g = jax.jit(lambda a: jnp.exp(a))
+        return jnp.sin(g(jnp.tanh(x)))
+    e = nsm_of_fn(f, _sds(4))
+    assert e[("tanh", "exp")] == 1.0
+    assert e[("exp", "sin")] == 1.0
+    assert all("jit" not in k for pair in e for k in pair)
+
+
+def test_grad_graph_has_more_edges():
+    def loss(w, x):
+        return jnp.sum(jnp.tanh(x @ w))
+    fwd = nsm_of_fn(lambda w, x: jnp.sum(jnp.tanh(x @ w)),
+                    _sds(8, 8), _sds(4, 8))
+    bwd = nsm_of_fn(jax.grad(loss), _sds(8, 8), _sds(4, 8))
+    assert sum(bwd.values()) > sum(fwd.values())
+
+
+def test_featurizer_fixed_dim_and_other_bucket():
+    e1 = {("dot", "tanh"): 3.0, ("tanh", "dot"): 2.0}
+    e2 = {("conv", "max"): 5.0}
+    f = NSMFeaturizer(max_vocab=3).fit([e1, e2])
+    assert len(f.vocab) == 3 and f.vocab[-1] == "<other>"
+    v1 = f.vector(e1)
+    assert v1.shape == (3 * 3 + 6,)
+    unseen = f.vector({("weird", "op"): 1.0})
+    assert unseen.sum() > 0  # lands in <other>
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(2, 9))
+def test_property_depth_scaling(width, depth):
+    """Stacking the same block d times scales every edge count by ~d."""
+    def block(x):
+        return jnp.tanh(x * 2.0 + 1.0)
+
+    def deep(x):
+        for _ in range(depth):
+            x = block(x)
+        return x
+
+    e1 = nsm_of_fn(block, _sds(width))
+    ed = nsm_of_fn(deep, _sds(width))
+    for pair, n in e1.items():
+        assert ed[pair] >= n * depth - depth  # boundary edges differ by <=1/iter
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 8))
+def test_property_scan_linear(length, width):
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c) * 1.5, None
+        y, _ = jax.lax.scan(body, x, None, length=length)
+        return y
+    e = nsm_of_fn(f, _sds(width))
+    assert e[("tanh", "mul")] == length
+    # all counts non-negative integers
+    assert all(v >= 0 and float(v).is_integer() for v in e.values())

@@ -1,0 +1,53 @@
+"""GA scheduling (paper §4.3): optimal recovery, memory feasibility."""
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (Job, Machine, makespan, schedule_ga,
+                                  schedule_optimal, schedule_random)
+
+GIB = 2**30
+
+
+def _jobs(n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Job(f"j{i}", float(rng.uniform(5, 80)),
+                float(rng.uniform(1, 8) * GIB)) for i in range(n)]
+
+
+MACHINES = [Machine("m1", 11 * GIB), Machine("m2", 24 * GIB)]
+
+
+def test_ga_matches_optimal_small():
+    jobs = _jobs(12)
+    opt, _ = schedule_optimal(jobs, MACHINES)
+    ga, assign, hist = schedule_ga(jobs, MACHINES, generations=40, seed=1,
+                                   return_history=True)
+    assert np.isfinite(opt)
+    assert ga <= opt * 1.02 + 1e-9
+    assert hist == sorted(hist, reverse=True)  # monotone improvement
+
+
+def test_ga_beats_random():
+    jobs = _jobs(16, seed=3)
+    rand_mean, _ = schedule_random(jobs, MACHINES, trials=50, seed=0)
+    ga, _ = schedule_ga(jobs, MACHINES, generations=30, seed=0)
+    assert ga < rand_mean
+
+
+def test_memory_infeasible_jobs_respected():
+    jobs = [Job("big", 10.0, 20 * GIB), Job("small", 5.0, 1 * GIB)]
+    # big job only fits machine 2
+    opt, assign = schedule_optimal(jobs, MACHINES)
+    assert assign[0] == 1
+    assert np.isfinite(opt)
+    # makespan is inf when forced onto the small machine
+    assert makespan([0, 0], jobs, MACHINES) == float("inf")
+
+
+def test_ga_avoids_oom_assignments():
+    jobs = [Job(f"b{i}", 10.0, 20 * GIB) for i in range(3)] + _jobs(6, 5)
+    ga, assign = schedule_ga(jobs, MACHINES, generations=30, seed=2)
+    assert np.isfinite(ga)
+    for i in range(3):
+        assert assign[i] == 1

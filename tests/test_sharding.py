@@ -1,0 +1,150 @@
+"""Sharding resolution rules, ZeRO rewriting, HLO analyzer invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hlo import analyze_text
+from repro.distributed import zero as zero_lib
+from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
+                                        resolve_spec)
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis names + shape only (resolve_spec needs those)."""
+
+    def __init__(self, shape, names):
+        import numpy as _np
+        self.axis_names = names
+        self.devices = _np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+STRICT = ShardingRules()
+
+
+def test_divisible_dims_shard():
+    spec = resolve_spec(("embed", "mlp"), (1024, 4096), MESH, STRICT)
+    assert tuple(spec) == (None, "model")
+
+
+def test_non_divisible_falls_back():
+    # 14 heads on 16-way model axis: strict -> replicated
+    spec = resolve_spec(("batch", "seq", "heads", "head_dim"),
+                        (32, 64, 14, 64), MESH, STRICT)
+    assert tuple(spec) == ("data",)  # trailing Nones trimmed
+
+
+def test_pad_tolerance_admits_40_heads():
+    rules = ShardingRules(pad_tolerance=4 / 3)
+    spec = resolve_spec(("batch", "seq", "heads", "head_dim"),
+                        (256, 64, 40, 64), MESH, rules)
+    assert tuple(spec) == ("data", None, "model")
+    # but rejects 2 kv heads (waste 8x)
+    spec = resolve_spec(("batch", "seq", "kv_heads", "head_dim"),
+                        (256, 64, 2, 64), MESH, rules)
+    assert tuple(spec) == ("data",)
+
+
+def test_axis_used_once_first_wins():
+    # experts and mlp both map to model; experts (leftmost) wins
+    spec = resolve_spec(("experts", "embed", None, "mlp"),
+                        (64, 1024, 2, 4096), MESH, STRICT)
+    assert tuple(spec) == ("model",)
+
+
+def test_pod_axis_only_on_multipod():
+    spec2 = resolve_spec(("batch", "seq"), (256, 64), MESH, STRICT)
+    spec3 = resolve_spec(("batch", "seq"), (256, 64), MESH3, STRICT)
+    assert tuple(spec2) == ("data",)
+    assert tuple(spec3) == (("pod", "data"),)
+
+
+def test_batch_of_one_replicates():
+    spec = resolve_spec(("batch", "seq"), (1, 2048), MESH, STRICT)
+    assert tuple(spec) == ()
+
+
+def test_zero_axes_add_data_shard():
+    axes = {"w": (None, "embed", "mlp")}   # stacked layer param
+    shapes = {"w": jax.ShapeDtypeStruct((4, 1024, 4096), jnp.float32)}
+    out = zero_lib.zero_axes(axes, shapes, MESH, STRICT)
+    # first unsharded, divisible dim gets "zero" (1024 % 16 == 0)
+    assert out["w"] == (None, "zero", "mlp")
+    zr = zero_lib.zero_rules(STRICT)
+    spec = resolve_spec(out["w"], (4, 1024, 4096), MESH, zr)
+    assert tuple(spec) == (None, "data", "model")
+
+
+def test_zero_skips_indivisible():
+    axes = {"w": (None, None)}
+    shapes = {"w": jax.ShapeDtypeStruct((3, 7), jnp.float32)}
+    out = zero_lib.zero_axes(axes, shapes, MESH, STRICT)
+    assert out["w"] == (None, None)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 4096))
+def test_property_resolve_never_uneven(d0, d1):
+    """Strict rules never emit a spec whose dim is not divisible."""
+    spec = resolve_spec(("mlp", "vocab"), (d0, d1), MESH, STRICT)
+    sizes = {"data": 16, "model": 16}
+    for dim, s in zip((d0, d1), tuple(spec) + (None,) * 2):
+        if s is not None:
+            n = sizes[s] if isinstance(s, str) else int(
+                np.prod([sizes[a] for a in s]))
+            assert dim % n == 0
+
+
+# -- HLO analyzer ------------------------------------------------------------
+
+
+def test_hlo_analyzer_scan_flops_exact():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=9)
+        return y
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    cost = analyze_text(c.as_text())
+    expect = 9 * 2 * 64 ** 3
+    assert abs(cost.flops - expect) / expect < 0.02
+
+
+def test_hlo_analyzer_counts_collectives_with_loop_multiplier():
+    """A collective inside a while body counts trip-count times."""
+    hlo = """
+HloModule m, entry_computation_layout={(f32[8,16]{1,0})->f32[8,16]{1,0}}
+
+%body (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]{1,0}) parameter(0)
+  %iv = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %one = s32[] constant(1)
+  %iv2 = s32[] add(%iv, %one)
+  %ag = f32[8,16]{1,0} all-gather(%x), dimensions={0}
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%iv2, %ag)
+}
+
+%cond (arg2: (s32[], f32[8,16])) -> pred[] {
+  %arg2 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %iv3 = s32[] get-tuple-element(%arg2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%iv3, %n), direction=LT
+}
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,16]{1,0}) tuple(%zero, %p0)
+  %w = (s32[], f32[8,16]{1,0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    cost = analyze_text(hlo)
+    assert cost.coll_counts == {"all-gather": 7.0}, cost.coll_counts
+    assert cost.coll_bytes == 7 * 8 * 16 * 4

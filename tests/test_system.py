@@ -1,0 +1,54 @@
+"""End-to-end behaviour of the paper's system: profile -> NSM features ->
+AutoML predictor -> schedule, plus the launcher admission-control path."""
+
+import numpy as np
+
+from repro.core.automl.models import (GradientBoostingRegressor,
+                                      RandomForestRegressor, RidgeRegressor)
+from repro.core.predictor import DNNAbacus
+from repro.core.profiler import profile_zoo
+from repro.core.scheduler import Job, Machine, schedule_ga, schedule_random
+
+GIB = 2**30
+
+
+def _factory(seed):
+    return [RandomForestRegressor(n_trees=25, max_depth=16,
+                                  min_samples_leaf=1, seed=seed),
+            GradientBoostingRegressor(n_stages=120, seed=seed),
+            RidgeRegressor()]
+
+
+def test_profile_fit_predict_schedule_end_to_end(tmp_path):
+    # 1. profile real training steps (paper §2 rig)
+    records = []
+    for net in ("lenet5", "squeezenet", "nin"):
+        for batch in (8, 16, 32):
+            r = profile_zoo(net, batch=batch, steps=2)
+            assert r.time_s > 0 and r.mem_bytes > 0 and r.flops > 0
+            assert r.nsm_edges  # the structural matrix is non-empty
+            records.append(r)
+
+    # 2. fit DNNAbacus (paper §3) and sanity-check in-sample MRE
+    ab = DNNAbacus().fit(records, candidate_factory=_factory)
+    ev = ab.evaluate(records)
+    assert ev["time_mre"] < 1.0 and ev["mem_mre"] < 1.0
+
+    # 3. persistence roundtrip (launcher admission control loads this)
+    path = str(tmp_path / "abacus")
+    ab.save(path)
+    ab2 = DNNAbacus.load(path)
+    t1, _ = ab.predict(records[:3])
+    t2, _ = ab2.predict(records[:3])
+    np.testing.assert_allclose(t1, t2)
+
+    # 4. schedule 9 jobs from PREDICTED costs (paper §4.3)
+    t_pred, m_pred = ab2.predict(records)
+    jobs = [Job(r.model_name, float(t) * 50, float(m) + GIB // 4)
+            for r, t, m in zip(records, t_pred, m_pred)]
+    machines = [Machine("sys1", 11 * GIB), Machine("sys2", 24 * GIB)]
+    ga, assign = schedule_ga(jobs, machines, generations=25, seed=0)
+    rnd, _ = schedule_random(jobs, machines, trials=50, seed=0)
+    assert np.isfinite(ga)
+    assert ga <= rnd * 1.0001  # GA at least matches mean random placement
+    assert len(assign) == len(jobs)
