@@ -1,0 +1,78 @@
+"""PredictionService: cold (trace) vs warm (cached) admission queries.
+
+Fits a small DNNAbacus on synthetic records, then times the same batch of
+(config, batch, seq) queries against a cold and a warm trace cache. The
+acceptance target is warm per-query latency >= 10x faster than cold —
+the trace cache is the whole point of serving predictions online.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.automl.models import RandomForestRegressor, RidgeRegressor
+from repro.core.features import ProfileRecord
+from repro.core.predictor import DNNAbacus
+from repro.serve.prediction_service import PredictionService, Query
+
+
+def _synthetic_records(n=80, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for i in range(n):
+        batch = int(rng.choice([2, 4, 8, 16]))
+        seq = int(rng.choice([32, 64, 128]))
+        layers = int(rng.integers(2, 16))
+        dots = float(rng.integers(4, 60))
+        flops = batch * seq * dots * 1e6
+        edges = {("dot", "add"): dots, ("add", "tanh"): dots,
+                 ("tanh", "dot"): dots - 1}
+        recs.append(ProfileRecord(
+            model_name=f"m{i}", family="dense", batch_size=batch,
+            input_size=seq, channels=64, learning_rate=1e-3, epoch=1,
+            optimizer="adamw", layers=layers, flops=flops,
+            params=int(dots * 1e5), nsm_edges=edges,
+            time_s=flops / 5e10, mem_bytes=1e6 * dots + 4.0 * batch * seq))
+    return recs
+
+
+def run(seed: int = 0):
+    fac = lambda s: [RandomForestRegressor(n_trees=10, seed=s),
+                     RidgeRegressor()]
+    ab = DNNAbacus(seed=seed).fit(_synthetic_records(seed=seed),
+                                  candidate_factory=fac)
+    service = PredictionService(ab)
+
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    queries = [Query(cfg, b, s) for b in (2, 4) for s in (32, 64)]
+
+    t0 = time.perf_counter()
+    service.predict_many(queries)
+    cold_s = time.perf_counter() - t0
+
+    reps = 50
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        service.predict_many(queries)
+    warm_s = (time.perf_counter() - t0) / reps
+
+    info = service.cache_info()
+    n = len(queries)
+    return [
+        ("n_queries", float(n)),
+        ("cold_qps", n / cold_s),
+        ("warm_qps", n / warm_s),
+        ("cold_ms_per_query", cold_s / n * 1e3),
+        ("warm_ms_per_query", warm_s / n * 1e3),
+        ("warm_speedup", cold_s / warm_s),
+        ("cache_hits", float(info["hits"])),
+        ("cache_misses", float(info["misses"])),
+    ]
+
+
+if __name__ == "__main__":
+    for name, val in run():
+        print(f"{name},{val:.6g}")

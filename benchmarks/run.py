@@ -22,6 +22,7 @@ BENCHES = [
     ("batch_mre", "benchmarks.bench_batch_mre"),        # Fig 12
     ("unseen", "benchmarks.bench_unseen"),              # Fig 13
     ("scheduling", "benchmarks.bench_scheduling"),      # Fig 14 / §4.3
+    ("service", "benchmarks.bench_service"),            # online query engine
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
 

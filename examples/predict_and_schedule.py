@@ -13,14 +13,17 @@ import sys
 
 sys.path.insert(0, "src")
 
+import time
+
 import numpy as np
 
 from repro.core.automl.models import (GradientBoostingRegressor,
                                       RandomForestRegressor, RidgeRegressor)
 from repro.core.predictor import DNNAbacus
 from repro.core.profiler import profile_zoo
-from repro.core.scheduler import (Job, Machine, schedule_ga,
-                                  schedule_optimal, schedule_random)
+from repro.core.scheduler import (Machine, jobs_from_estimates, schedule_ga,
+                                  schedule_jobs)
+from repro.serve.prediction_service import PredictionService, Query
 
 GIB = 2**30
 
@@ -41,16 +44,19 @@ def main():
     abacus.save("artifacts/abacus")
     print("predictor saved to artifacts/abacus.json")
 
-    # 20 jobs with predicted cost
+    # all online queries go through the batched, trace-caching service
+    service = PredictionService(abacus)
+
+    # 20 jobs with predicted cost — one design matrix, one ensemble pass
     rng = np.random.default_rng(0)
     chosen = [records[i] for i in rng.choice(len(records), 20)]
-    t_pred, m_pred = abacus.predict(chosen)
-    jobs = [Job(r.model_name, float(t) * 100, float(m) + GIB // 2)
-            for r, t, m in zip(chosen, t_pred, m_pred)]
+    t_pred, m_pred = service.predict_records(chosen)
+    jobs = jobs_from_estimates([r.model_name for r in chosen], t_pred, m_pred,
+                               time_scale=100, mem_pad=GIB // 2)
     machines = [Machine("system1", 11 * GIB), Machine("system2", 24 * GIB)]
 
-    opt, _ = schedule_optimal(jobs, machines)
-    rand_mean, _ = schedule_random(jobs, machines, trials=100)
+    opt, _ = schedule_jobs(jobs, machines, plan="optimal")
+    rand_mean, _ = schedule_jobs(jobs, machines, plan="random", trials=100)
     ga, assign, hist = schedule_ga(jobs, machines, generations=20,
                                    return_history=True)
     print(f"== makespans ==\n  optimal : {opt:9.1f} s\n"
@@ -59,6 +65,23 @@ def main():
           f"({(1 - ga / rand_mean) * 100:.1f}% better than random)")
     print(f"  GA generations to best: {int(np.argmin(hist)) + 1}")
     print(f"  assignment: {assign}")
+
+    # admission-control queries on LM configs: cold traces vs cached
+    from repro.configs import get_config, reduced_config
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    queries = [Query(cfg, b, 32) for b in (2, 4)]
+    t0 = time.perf_counter()
+    service.predict_many(queries)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ests = service.predict_many(queries)
+    warm = time.perf_counter() - t0
+    print("== admission control (PredictionService) ==")
+    for e in ests:
+        print(f"  {e['model']}: {e['time_s']*1e3:.1f} ms, "
+              f"{e['memory_bytes']/GIB:.2f} GiB, admitted={e['admitted']}")
+    print(f"  cold {cold*1e3:.0f} ms -> warm {warm*1e3:.1f} ms "
+          f"(cache {service.cache_info()})")
 
 
 if __name__ == "__main__":

@@ -73,15 +73,14 @@ def record_from_json(d: Dict) -> "ProfileRecord":
 
 def design_matrix(records: List[ProfileRecord], nsm_featurizer=None,
                   graph_featurizer=None) -> np.ndarray:
-    rows = []
-    for r in records:
-        parts = [r.si_vector()]
-        if nsm_featurizer is not None:
-            parts.append(nsm_featurizer.vector(r.nsm_edges))
-        if graph_featurizer is not None:
-            parts.append(graph_featurizer.vector(r.nsm_edges))
-        rows.append(np.concatenate(parts))
-    return np.stack(rows)
+    """One (N, D) design matrix for N records."""
+    blocks = [np.stack([r.si_vector() for r in records])]
+    if nsm_featurizer is not None:
+        blocks.append(nsm_featurizer.vectors([r.nsm_edges for r in records]))
+    if graph_featurizer is not None:
+        blocks.append(np.stack([graph_featurizer.vector(r.nsm_edges)
+                                for r in records]))
+    return np.concatenate(blocks, axis=1)
 
 
 def targets(records: List[ProfileRecord]):

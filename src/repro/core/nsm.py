@@ -147,11 +147,20 @@ def _traverse(jaxpr, env: Dict[Any, str], mult: float, counts: EdgeCounts):
 
 
 class NSMFeaturizer:
-    """Maps edge-count dicts to a fixed (V x V) matrix / flat vector."""
+    """Maps edge-count dicts to a fixed (V x V) matrix / flat vector.
+
+    Featurization is vectorized: op->index resolution goes through a dict
+    (rebuilt lazily whenever ``vocab`` is replaced, e.g. by ``fit`` or a
+    predictor ``load``) and cell accumulation is a single NumPy
+    scatter-add over all edges, so per-query cost is O(E) dict lookups
+    instead of O(E*V) ``list.index`` calls.
+    """
 
     def __init__(self, vocab=None, max_vocab: int = 28):
         self.vocab = list(vocab) if vocab else None
         self.max_vocab = max_vocab
+        self._index: Optional[Dict[str, int]] = None
+        self._index_vocab = None  # vocab contents the index was built from
 
     def fit(self, edge_dicts) -> "NSMFeaturizer":
         freq: Dict[str, float] = defaultdict(float)
@@ -163,17 +172,29 @@ class NSMFeaturizer:
         self.vocab = sorted(ops) + ["<other>"]
         return self
 
+    def _op_index(self) -> Dict[str, int]:
+        key = tuple(self.vocab)  # content-based: survives in-place edits
+        if self._index is None or self._index_vocab != key:
+            self._index = {op: i for i, op in enumerate(self.vocab)}
+            self._index_vocab = key
+        return self._index
+
     def _idx(self, op: str) -> int:
-        try:
-            return self.vocab.index(op)
-        except ValueError:
-            return len(self.vocab) - 1
+        return self._op_index().get(op, len(self.vocab) - 1)
 
     def matrix(self, edges: EdgeCounts) -> np.ndarray:
         v = len(self.vocab)
         m = np.zeros((v, v), np.float64)
-        for (a, b), n in edges.items():
-            m[self._idx(a), self._idx(b)] += n
+        if not edges:
+            return m
+        idx = self._op_index()
+        other = v - 1
+        rows = np.fromiter((idx.get(a, other) for a, _ in edges),
+                           np.intp, count=len(edges))
+        cols = np.fromiter((idx.get(b, other) for _, b in edges),
+                           np.intp, count=len(edges))
+        vals = np.fromiter(edges.values(), np.float64, count=len(edges))
+        np.add.at(m, (rows, cols), vals)
         return m
 
     def vector(self, edges: EdgeCounts, log_scale: bool = True) -> np.ndarray:
@@ -181,6 +202,14 @@ class NSMFeaturizer:
         flat = m.reshape(-1)
         aug = np.concatenate([flat, m.sum(0), m.sum(1)])  # + in/out degrees
         return np.log1p(aug) if log_scale else aug
+
+    def vectors(self, edge_dicts, log_scale: bool = True) -> np.ndarray:
+        """One (N, dim) block for N edge dicts. Per-record loop: the
+        vectorization lives inside ``matrix`` (the scatter-add)."""
+        if not edge_dicts:
+            return np.zeros((0, self.dim), np.float64)
+        return np.stack([self.vector(e, log_scale=log_scale)
+                         for e in edge_dicts])
 
     @property
     def dim(self) -> int:

@@ -35,6 +35,7 @@ class DNNAbacus:
         self.ge_feat = (WLGraphEmbedder() if representation == "ge" else None)
         self.time_model: Optional[FittedEnsemble] = None
         self.mem_model: Optional[FittedEnsemble] = None
+        self._service = None  # lazy PredictionService (see ``service``)
 
     # -- featurization ------------------------------------------------------
     def _x(self, records: Sequence[ProfileRecord]) -> np.ndarray:
@@ -67,40 +68,27 @@ class DNNAbacus:
         return {"time_mre": mre(t_pred, t), "mem_mre": mre(m_pred, m)}
 
     # -- launcher integration ------------------------------------------------
-    def predict_config(self, cfg, batch: int, seq: int) -> Dict[str, float]:
-        """Admission-control estimate for a (ModelConfig, batch, seq) job."""
-        from repro.core.profiler import profile_lm  # features only, no run
-        from repro.models import build_model
-        import jax
-        import jax.numpy as jnp
-        from repro.train import optimizer as opt_lib
-        from repro.train import step as step_lib
+    def service(self) -> "object":
+        """The (lazily created) PredictionService fronting this predictor.
 
-        model = build_model(cfg)
-        opt_cfg = opt_lib.OptConfig(keep_master=False)
-        step = step_lib.make_train_step(model, opt_cfg)
-        state_sds = step_lib.state_shapes(model, opt_cfg)
-        b = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
-             "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
-        dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
-        if cfg.cross_every:
-            b["patches"] = jax.ShapeDtypeStruct(
-                (batch, cfg.vision_seq, cfg.d_model), dt)
-        if cfg.is_encoder_decoder:
-            b["frames"] = jax.ShapeDtypeStruct(
-                (batch, cfg.audio_seq, cfg.d_model), dt)
-        closed = jax.make_jaxpr(step)(state_sds, b)
-        edges = nsm_lib.nsm_edges(closed)
-        rec = ProfileRecord(
-            model_name=cfg.name, family=cfg.family, batch_size=batch,
-            input_size=seq, channels=cfg.d_model, learning_rate=1e-3,
-            epoch=1, optimizer="adamw", layers=cfg.num_layers,
-            flops=6.0 * model.param_count(active_only=True) * batch * seq,
-            params=model.param_count(), nsm_edges=edges)
-        t_pred, m_pred = self.predict([rec])
-        return {"time_s": float(t_pred[0]),
-                "memory_bytes": float(m_pred[0]),
-                "hbm_budget": float(HBM_PER_DEVICE)}
+        All online queries go through it: repeated (config, batch, seq)
+        questions hit its trace cache instead of re-building the model.
+        For custom options (budget, cache size, tracer) construct a
+        ``PredictionService`` directly — recreating it here would throw
+        away the warm trace cache.
+        """
+        if self._service is None:
+            from repro.serve.prediction_service import PredictionService
+            self._service = PredictionService(self)
+        return self._service
+
+    def predict_config(self, cfg, batch: int, seq: int) -> Dict:
+        """Admission-control estimate for a (ModelConfig, batch, seq) job.
+
+        Returns the service estimate dict: ``time_s``, ``memory_bytes``,
+        ``hbm_budget`` (floats) plus ``model`` (str) / ``admitted`` (bool).
+        """
+        return self.service().predict_one(cfg, batch, seq)
 
     # -- persistence ----------------------------------------------------------
     def save(self, path: str) -> None:

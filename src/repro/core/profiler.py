@@ -163,17 +163,12 @@ def profile_zoo(name: str, batch: int = 16, image: int = 32,
 # ---------------------------------------------------------------------------
 
 
-def profile_lm(cfg, batch: int = 2, seq: int = 64, lr: float = 1e-3,
-               optimizer: str = "adamw", steps: int = 3,
-               platform: int = 0) -> ProfileRecord:
-    from repro.models import build_model
-    from repro.train import optimizer as opt_lib
-    from repro.train import step as step_lib
+def lm_batch_specs(cfg, batch: int, seq: int) -> Dict:
+    """Abstract {tokens, labels[, patches, frames]} train-step inputs.
 
-    model = build_model(cfg)
-    opt_cfg = opt_lib.OptConfig(lr=lr, keep_master=False)
-    step = step_lib.make_train_step(model, opt_cfg)
-    state_sds = step_lib.state_shapes(model, opt_cfg)
+    Single source of truth for the modality conditionals — the profiler
+    and the serving-side trace path must featurize identical graphs.
+    """
     b = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
          "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
     dt = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
@@ -183,11 +178,45 @@ def profile_lm(cfg, batch: int = 2, seq: int = 64, lr: float = 1e-3,
     if cfg.is_encoder_decoder:
         b["frames"] = jax.ShapeDtypeStruct((batch, cfg.audio_seq,
                                             cfg.d_model), dt)
-    meas = profile_step(step, (state_sds, b), steps=steps)
+    return b
+
+
+def lm_trace(cfg, batch: int, seq: int, lr: float = 1e-3):
+    """(model, step_fn, state_specs, batch_specs) for one LM train step.
+
+    Shared by the offline profiler and the online PredictionService
+    tracer so both featurize the exact same graph.
+    """
+    from repro.models import build_model
+    from repro.train import optimizer as opt_lib
+    from repro.train import step as step_lib
+
+    model = build_model(cfg)
+    opt_cfg = opt_lib.OptConfig(lr=lr, keep_master=False)
+    step = step_lib.make_train_step(model, opt_cfg)
+    state_sds = step_lib.state_shapes(model, opt_cfg)
+    return model, step, state_sds, lm_batch_specs(cfg, batch, seq)
+
+
+def lm_record(cfg, model, batch: int, seq: int, *, flops, nsm_edges,
+              lr: float = 1e-3, optimizer: str = "adamw",
+              time_s: float = 0.0, mem_bytes: float = 0.0,
+              platform: int = 0) -> ProfileRecord:
+    """The canonical ModelConfig -> ProfileRecord field mapping."""
     return ProfileRecord(
         model_name=cfg.name, family=cfg.family, batch_size=batch,
         input_size=seq, channels=cfg.d_model, learning_rate=lr, epoch=1,
-        optimizer=optimizer, layers=cfg.num_layers, flops=meas["flops"],
-        params=model.param_count(), nsm_edges=meas["nsm_edges"],
-        time_s=meas["time_s"], mem_bytes=meas["mem_bytes"],
-        platform=platform)
+        optimizer=optimizer, layers=cfg.num_layers, flops=flops,
+        params=model.param_count(), nsm_edges=nsm_edges,
+        time_s=time_s, mem_bytes=mem_bytes, platform=platform)
+
+
+def profile_lm(cfg, batch: int = 2, seq: int = 64, lr: float = 1e-3,
+               optimizer: str = "adamw", steps: int = 3,
+               platform: int = 0) -> ProfileRecord:
+    model, step, state_sds, b = lm_trace(cfg, batch, seq, lr)
+    meas = profile_step(step, (state_sds, b), steps=steps)
+    return lm_record(cfg, model, batch, seq, flops=meas["flops"],
+                     nsm_edges=meas["nsm_edges"], lr=lr, optimizer=optimizer,
+                     time_s=meas["time_s"], mem_bytes=meas["mem_bytes"],
+                     platform=platform)

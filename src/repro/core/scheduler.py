@@ -32,6 +32,15 @@ class Machine:
     speed: float = 1.0  # relative throughput
 
 
+def jobs_from_estimates(names: Sequence[str], times: Sequence[float],
+                        mems: Sequence[float], time_scale: float = 1.0,
+                        mem_pad: float = 0.0) -> List[Job]:
+    """Jobs from predicted (time, memory); scale step time to job length,
+    pad memory for framework overhead (as in the paper's §4.3 setup)."""
+    return [Job(n, float(t) * time_scale, float(m) + mem_pad)
+            for n, t, m in zip(names, times, mems)]
+
+
 def makespan(assign: Sequence[int], jobs: Sequence[Job],
              machines: Sequence[Machine]) -> float:
     """Max per-machine total time; +inf if any job violates memory."""
@@ -110,3 +119,15 @@ def schedule_ga(jobs, machines, pop_size: int = 20, generations: int = 20,
     if return_history:
         return best_s, list(best_a), history
     return best_s, list(best_a)
+
+
+PLANS = {"optimal": schedule_optimal, "random": schedule_random,
+         "ga": schedule_ga}
+
+
+def schedule_jobs(jobs: Sequence[Job], machines: Sequence[Machine],
+                  plan: str = "ga", **kw):
+    """Dispatch to one of the paper's three placement plans by name."""
+    if plan not in PLANS:
+        raise ValueError(f"unknown plan {plan!r}; choose from {sorted(PLANS)}")
+    return PLANS[plan](jobs, machines, **kw)

@@ -121,8 +121,14 @@ def _lower_cell(arch: str, shape_name: str, mesh, rules: shd.ShardingRules,
 
 def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 rules: Optional[shd.ShardingRules] = None,
-                verbose: bool = True, scheme: str = "sp") -> Dict:
-    """Lower + compile one cell; return roofline record (§Dry-run/§Roofline)."""
+                verbose: bool = True, scheme: str = "sp",
+                service=None) -> Dict:
+    """Lower + compile one cell; return roofline record (§Dry-run/§Roofline).
+
+    With a ``PredictionService``, train cells also carry the DNNAbacus
+    (predicted) step time/memory next to the roofline numbers — repeated
+    sweeps over the grid hit the service's trace cache.
+    """
     cfg = get_config(arch)
     shp = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shp)
@@ -149,6 +155,15 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         **roof.summary(mflops),
     }
+    if service is not None and shp.kind == "train":
+        # the estimate is an optional annotation: never let a predictor
+        # failure overwrite a successfully compiled cell's record
+        try:
+            est = service.predict_one(cfg, shp.global_batch, shp.seq_len)
+            rec["abacus_time_s"] = round(est["time_s"], 4)
+            rec["abacus_memory_gib"] = round(est["memory_bytes"] / 2**30, 3)
+        except Exception as e:
+            rec["abacus_error"] = f"{type(e).__name__}: {e}"[:200]
     if verbose:
         ma = compiled.memory_analysis()
         print(f"[dryrun] {arch} x {shape_name} mesh={mesh.devices.shape}")
@@ -175,7 +190,19 @@ def main(argv=None) -> int:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default=None, help="append JSONL records here")
     ap.add_argument("--scheme", default="sp", help="sp | sp_heads | tp")
+    ap.add_argument("--predict", action="store_true",
+                    help="attach DNNAbacus estimates to train cells")
+    ap.add_argument("--predictor-path", default="artifacts/abacus")
     args = ap.parse_args(argv)
+
+    service = None
+    if args.predict:
+        from repro.core.predictor import DNNAbacus
+        if os.path.exists(args.predictor_path + ".json"):
+            service = DNNAbacus.load(args.predictor_path).service()
+        else:
+            print(f"[dryrun] no fitted predictor at {args.predictor_path}; "
+                  "skipping estimates", file=sys.stderr)
 
     archs = [args.arch] if args.arch else list_archs()
     shapes = [args.shape] if args.shape else list(SHAPES)
@@ -186,7 +213,7 @@ def main(argv=None) -> int:
             for mp in meshes:
                 try:
                     rec = dryrun_cell(arch, shape_name, multi_pod=mp,
-                                      scheme=args.scheme)
+                                      scheme=args.scheme, service=service)
                 except Exception as e:  # a failure here is a sharding bug
                     rec = {"arch": arch, "shape": shape_name, "multi_pod": mp,
                            "status": "FAILED", "error": f"{type(e).__name__}: {e}"}

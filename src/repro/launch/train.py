@@ -54,8 +54,8 @@ def main(argv=None) -> int:
     if args.predict:
         from repro.core.predictor import DNNAbacus
         if os.path.exists(args.predictor_path + ".json"):
-            abacus = DNNAbacus.load(args.predictor_path)
-            est = abacus.predict_config(cfg, args.batch, args.seq)
+            service = DNNAbacus.load(args.predictor_path).service()
+            est = service.predict_one(cfg, args.batch, args.seq)
             predicted = est["time_s"]
             print(f"[abacus] predicted step time {est['time_s']*1e3:.1f} ms, "
                   f"peak memory {est['memory_bytes']/2**30:.2f} GiB")

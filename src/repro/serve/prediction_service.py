@@ -1,0 +1,203 @@
+"""Batched prediction service with jaxpr-trace caching (paper §4.3 online).
+
+``DNNAbacus.predict_config`` answers one admission-control query by
+building the model, tracing the train step, and extracting the NSM — all
+from scratch. At datacenter query rates (scheduler loops, per-job
+admission control) that trace dominates end-to-end latency, and it is
+fully determined by ``(config, batch, seq)``. ``PredictionService``
+amortizes it:
+
+  * **Trace cache** — content-addressed by ``(config fingerprint, batch,
+    seq)`` where the fingerprint hashes every ``ModelConfig`` field, so
+    structurally identical queries (including distinct-but-equal config
+    objects) never re-build or re-trace. LRU-bounded, thread-safe, with
+    in-flight deduplication of concurrent identical misses.
+  * **Batched queries** — ``predict_many`` featurizes N queries into one
+    design matrix and runs the time/memory ensembles once, instead of N
+    single-row predictions.
+  * **Scheduling bridge** — ``jobs``/``schedule`` turn query estimates
+    directly into GA/optimal/random placement (``repro.core.scheduler``).
+
+The service holds a *reference* to the fitted ``DNNAbacus``; re-fitting
+the predictor is picked up automatically (cached records store raw NSM
+edges, featurization happens at predict time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+from repro.core.features import ProfileRecord
+from repro.core.predictor import HBM_PER_DEVICE
+from repro.core.scheduler import Machine, jobs_from_estimates, schedule_jobs
+
+CacheKey = Tuple[str, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One admission-control question: cost of (config, batch, seq)."""
+    cfg: Any  # ModelConfig
+    batch: int
+    seq: int
+
+
+def config_fingerprint(cfg) -> str:
+    """Content hash over every config field (stable across processes)."""
+    if dataclasses.is_dataclass(cfg):
+        payload = dataclasses.asdict(cfg)
+    else:  # duck-typed config (tests): hash its public attributes
+        payload = {k: v for k, v in sorted(vars(cfg).items())}
+    blob = json.dumps(payload, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def trace_query(cfg, batch: int, seq: int) -> ProfileRecord:
+    """Build + trace one train step at abstract shapes; features only.
+
+    This is the expensive path the cache exists to amortize: model
+    construction, jaxpr tracing of the full train step, and NSM
+    extraction. No arrays are allocated and nothing is compiled. Uses
+    the profiler's ``lm_trace``/``lm_record`` so online features match
+    the offline profiling rig exactly.
+    """
+    import jax
+
+    from repro.core import nsm as nsm_lib
+    from repro.core.profiler import lm_record, lm_trace
+
+    model, step, state_sds, b = lm_trace(cfg, batch, seq)
+    closed = jax.make_jaxpr(step)(state_sds, b)
+    edges = nsm_lib.nsm_edges(closed)
+    return lm_record(
+        cfg, model, batch, seq,
+        flops=6.0 * model.param_count(active_only=True) * batch * seq,
+        nsm_edges=edges)
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def queries(self) -> int:
+        return self.hits + self.misses
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "queries": self.queries}
+
+
+class PredictionService:
+    """Online query engine over a fitted ``DNNAbacus``."""
+
+    def __init__(self, abacus, max_cache_entries: int = 1024,
+                 hbm_budget: float = HBM_PER_DEVICE,
+                 tracer: Callable[..., ProfileRecord] = trace_query):
+        self.abacus = abacus
+        self.hbm_budget = float(hbm_budget)
+        self.max_cache_entries = max_cache_entries
+        self._tracer = tracer  # injectable: tests count trace calls
+        self._cache: "OrderedDict[CacheKey, ProfileRecord]" = OrderedDict()
+        self._inflight: Dict[CacheKey, threading.Event] = {}
+        self._lock = threading.Lock()
+        self.stats = ServiceStats()
+
+    # -- trace cache --------------------------------------------------------
+    def cache_key(self, cfg, batch: int, seq: int) -> CacheKey:
+        return (config_fingerprint(cfg), int(batch), int(seq))
+
+    def record_for(self, cfg, batch: int, seq: int) -> ProfileRecord:
+        """Cached (config, batch, seq) -> ProfileRecord feature template.
+
+        Concurrent identical queries are deduplicated: one thread runs
+        the trace, the rest wait on its in-flight event and read the
+        cache — a burst of N equal queries costs one trace, not N.
+        """
+        key = self.cache_key(cfg, batch, seq)
+        while True:
+            with self._lock:
+                rec = self._cache.get(key)
+                if rec is not None:
+                    self._cache.move_to_end(key)
+                    self.stats.hits += 1
+                    return rec
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+                    self.stats.misses += 1
+                    break
+            ev.wait()  # another thread is tracing this key; then re-check
+        try:
+            rec = self._tracer(cfg, batch, seq)
+            with self._lock:
+                self._cache[key] = rec
+                self._cache.move_to_end(key)
+                while len(self._cache) > self.max_cache_entries:
+                    self._cache.popitem(last=False)
+                    self.stats.evictions += 1
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+            ev.set()
+        return rec
+
+    def cache_info(self) -> Dict[str, int]:
+        with self._lock:
+            return {"entries": len(self._cache), **self.stats.as_dict()}
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._cache.clear()
+
+    # -- queries ------------------------------------------------------------
+    def _estimate(self, rec: ProfileRecord, t: float, m: float) -> Dict:
+        return {"model": rec.model_name, "time_s": float(t),
+                "memory_bytes": float(m), "hbm_budget": self.hbm_budget,
+                "admitted": float(m) <= self.hbm_budget}
+
+    def predict_one(self, cfg, batch: int, seq: int) -> Dict:
+        """Admission-control estimate for a (ModelConfig, batch, seq) job."""
+        return self.predict_many([Query(cfg, batch, seq)])[0]
+
+    def predict_many(self, queries: Sequence) -> List[Dict]:
+        """Batched queries: one design matrix, one ensemble pass per target.
+
+        ``queries`` holds ``Query`` objects or ``(cfg, batch, seq)`` tuples.
+        """
+        qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
+        if not qs:
+            return []
+        recs = [self.record_for(q.cfg, q.batch, q.seq) for q in qs]
+        t_pred, m_pred = self.abacus.predict(recs)
+        return [self._estimate(r, t, m)
+                for r, t, m in zip(recs, t_pred, m_pred)]
+
+    def predict_records(self, records: Sequence[ProfileRecord]):
+        """Batched (time, memory) prediction for already-traced records."""
+        return self.abacus.predict(list(records))
+
+    # -- scheduling bridge (paper §4.3) -------------------------------------
+    def jobs(self, queries: Sequence, time_scale: float = 1.0,
+             mem_pad: float = 0.0):
+        """Scheduler ``Job``s from batched query estimates."""
+        ests = self.predict_many(queries)
+        return jobs_from_estimates(
+            [e["model"] for e in ests], [e["time_s"] for e in ests],
+            [e["memory_bytes"] for e in ests],
+            time_scale=time_scale, mem_pad=mem_pad)
+
+    def schedule(self, queries: Sequence, machines: Sequence[Machine],
+                 plan: str = "ga", time_scale: float = 1.0,
+                 mem_pad: float = 0.0, **kw):
+        """Place predicted jobs on machines via the chosen plan."""
+        return schedule_jobs(self.jobs(queries, time_scale, mem_pad),
+                             machines, plan=plan, **kw)

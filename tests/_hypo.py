@@ -1,0 +1,70 @@
+"""Optional-``hypothesis`` compat shim.
+
+Property tests import ``given/settings/st`` from here instead of from
+``hypothesis`` directly. When hypothesis is installed the real machinery
+is re-exported unchanged; on a bare environment a tiny deterministic
+fallback runs each property against a fixed, seeded sample of the
+strategy space (endpoints always included), so the suite still collects
+and exercises the properties — just without shrinking/coverage search.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as np
+
+    class _IntStrategy:
+        """Inclusive integer range, like ``hypothesis.strategies.integers``."""
+
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def samples(self, n: int, rng) -> list:
+            fixed = [self.lo, self.hi]
+            drawn = [int(rng.integers(self.lo, self.hi + 1))
+                     for _ in range(max(0, n - len(fixed)))]
+            return (fixed + drawn)[:n]
+
+    class _St:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    st = _St()
+
+    def settings(max_examples: int = 10, **_ignored):
+        """Records ``max_examples``; other hypothesis knobs are no-ops."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        """Run the test over a fixed seeded sample of the strategy space."""
+
+        def deco(fn):
+            def runner():
+                # @settings may sit above @given (stamps the runner) or
+                # below it (stamps the original fn) — honor both.
+                n = getattr(runner, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                rng = np.random.default_rng(0)
+                cols = [s.samples(n, rng) for s in strategies]
+                for example in itertools.islice(zip(*cols), n):
+                    fn(*example)
+
+            # no functools.wraps: pytest must see runner's 0-arg
+            # signature, not the property's parameters (-> "fixtures")
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco

@@ -2,3 +2,7 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests import given/settings/st from tests/_hypo.py, which
+# re-exports hypothesis when installed and falls back to a deterministic
+# fixed-example runner when not (so the suite collects on bare envs).

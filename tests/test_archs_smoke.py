@@ -18,6 +18,9 @@ from repro.train import step as step_lib
 
 B, S = 2, 64
 
+# builds + jits every assigned architecture: tier-2 only
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg):
     tokens = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 7) % (

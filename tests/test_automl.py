@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.automl.models import (ExtraTreesRegressor,
                                       GradientBoostingRegressor,

@@ -1,0 +1,284 @@
+"""PredictionService: trace cache, batched queries, vectorized NSM parity."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.core.automl.models import RidgeRegressor
+from repro.core.features import ProfileRecord
+from repro.core.nsm import NSMFeaturizer
+from repro.core.predictor import DNNAbacus
+from repro.core.scheduler import (Machine, jobs_from_estimates,
+                                  schedule_jobs)
+from repro.serve.prediction_service import (PredictionService, Query,
+                                            config_fingerprint)
+
+OPS = ["dot", "add", "tanh", "exp", "conv", "max", "mul", "weird_op",
+       "unseen1", "unseen2"]
+
+
+def _random_edges(rng, n_edges: int):
+    return {(OPS[int(rng.integers(len(OPS)))],
+             OPS[int(rng.integers(len(OPS)))]): float(rng.integers(1, 50))
+            for _ in range(n_edges)}
+
+
+def _records(n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for i in range(n):
+        batch = int(rng.choice([2, 4, 8]))
+        edges = _random_edges(rng, 6)
+        recs.append(ProfileRecord(
+            model_name=f"m{i}", family="dense", batch_size=batch,
+            input_size=32, channels=16, learning_rate=1e-3, epoch=1,
+            optimizer="adamw", layers=4, flops=batch * 1e8,
+            params=10_000, nsm_edges=edges,
+            time_s=batch * 0.01, mem_bytes=batch * 1e6))
+    return recs
+
+
+def _abacus(seed=0):
+    fac = lambda s: [RidgeRegressor()]
+    return DNNAbacus(seed=seed).fit(_records(seed=seed),
+                                    candidate_factory=fac)
+
+
+def _fake_cfg(name="fake", batch_sens=1.0):
+    """Duck-typed stand-in for ModelConfig (fingerprint uses vars())."""
+
+    class _Cfg:
+        def __init__(self):
+            self.name = name
+            self.family = "dense"
+            self.num_layers = 4
+            self.d_model = 16
+            self.batch_sens = batch_sens
+
+    return _Cfg()
+
+
+def _counting_tracer(calls):
+    def tracer(cfg, batch, seq):
+        calls.append((cfg.name, batch, seq))
+        rng = np.random.default_rng(batch * 1000 + seq)
+        return ProfileRecord(
+            model_name=cfg.name, family=cfg.family, batch_size=batch,
+            input_size=seq, channels=16, learning_rate=1e-3, epoch=1,
+            optimizer="adamw", layers=cfg.num_layers, flops=batch * seq * 1e6,
+            params=10_000, nsm_edges=_random_edges(rng, 5))
+    return tracer
+
+
+# -- vectorized NSM featurization parity -------------------------------------
+
+
+def _naive_matrix(feat: NSMFeaturizer, edges) -> np.ndarray:
+    """The original O(E*V) implementation, kept as the parity oracle."""
+    def idx(op):
+        try:
+            return feat.vocab.index(op)
+        except ValueError:
+            return len(feat.vocab) - 1
+
+    v = len(feat.vocab)
+    m = np.zeros((v, v), np.float64)
+    for (a, b), n in edges.items():
+        m[idx(a), idx(b)] += n
+    return m
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 40))
+def test_vectorized_matrix_bitmatches_naive(seed, n_edges):
+    rng = np.random.default_rng(seed)
+    fit_dicts = [_random_edges(rng, 8) for _ in range(4)]
+    feat = NSMFeaturizer(max_vocab=6).fit(fit_dicts)
+    edges = _random_edges(rng, n_edges)
+    np.testing.assert_array_equal(feat.matrix(edges),
+                                  _naive_matrix(feat, edges))
+    np.testing.assert_array_equal(
+        feat.vector(edges),
+        np.log1p(np.concatenate([
+            _naive_matrix(feat, edges).reshape(-1),
+            _naive_matrix(feat, edges).sum(0),
+            _naive_matrix(feat, edges).sum(1)])))
+
+
+def test_featurizer_index_rebuilds_after_vocab_swap():
+    feat = NSMFeaturizer(max_vocab=4).fit([{("dot", "add"): 1.0}])
+    m1 = feat.matrix({("dot", "add"): 2.0})
+    assert m1.sum() == 2.0
+    feat.vocab = ["tanh", "exp", "<other>"]  # as DNNAbacus.load does
+    m2 = feat.matrix({("tanh", "exp"): 3.0})
+    assert m2[0, 1] == 3.0 and m2.shape == (3, 3)
+
+
+def test_batched_vectors_match_single():
+    rng = np.random.default_rng(7)
+    dicts = [_random_edges(rng, 5) for _ in range(6)]
+    feat = NSMFeaturizer(max_vocab=5).fit(dicts)
+    batched = feat.vectors(dicts)
+    assert batched.shape == (6, feat.dim)
+    for i, d in enumerate(dicts):
+        np.testing.assert_array_equal(batched[i], feat.vector(d))
+
+
+# -- trace cache -------------------------------------------------------------
+
+
+def test_second_query_hits_cache_no_retrace():
+    calls = []
+    svc = PredictionService(_abacus(), tracer=_counting_tracer(calls))
+    cfg = _fake_cfg()
+    e1 = svc.predict_one(cfg, 2, 32)
+    assert len(calls) == 1
+    e2 = svc.predict_one(cfg, 2, 32)
+    assert len(calls) == 1  # cache hit: no second trace
+    assert e1["time_s"] == e2["time_s"]
+    assert e1["memory_bytes"] == e2["memory_bytes"]
+    svc.predict_one(cfg, 4, 32)
+    assert len(calls) == 2  # new (batch) key -> one new trace
+    info = svc.cache_info()
+    assert info["hits"] == 1 and info["misses"] == 2 and info["entries"] == 2
+
+
+def test_concurrent_identical_queries_trace_once():
+    import threading
+    import time
+
+    calls = []
+    base = _counting_tracer(calls)
+
+    def slow_tracer(cfg, batch, seq):
+        time.sleep(0.05)
+        return base(cfg, batch, seq)
+
+    svc = PredictionService(_abacus(), tracer=slow_tracer)
+    cfg = _fake_cfg()
+    results = []
+
+    def worker():
+        results.append(svc.predict_one(cfg, 2, 32))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(calls) == 1  # in-flight dedup: a burst pays one trace
+    assert len(results) == 8
+    assert len({r["time_s"] for r in results}) == 1
+
+
+def test_fingerprint_is_content_addressed():
+    from repro.configs import get_config, reduced_config
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    twin = dataclasses.replace(cfg)  # distinct object, equal content
+    assert cfg is not twin
+    assert config_fingerprint(cfg) == config_fingerprint(twin)
+    other = dataclasses.replace(cfg, num_layers=cfg.num_layers + 1)
+    assert config_fingerprint(cfg) != config_fingerprint(other)
+
+
+def test_lru_eviction_bounds_cache():
+    calls = []
+    svc = PredictionService(_abacus(), max_cache_entries=2,
+                            tracer=_counting_tracer(calls))
+    cfg = _fake_cfg()
+    for batch in (2, 4, 8):
+        svc.predict_one(cfg, batch, 32)
+    assert svc.cache_info()["entries"] == 2
+    assert svc.stats.evictions == 1
+    svc.predict_one(cfg, 2, 32)  # evicted -> re-traced
+    assert len(calls) == 4
+
+
+# -- batched prediction ------------------------------------------------------
+
+
+def test_predict_many_matches_looped_predict_one():
+    calls = []
+    ab = _abacus()
+    svc = PredictionService(ab, tracer=_counting_tracer(calls))
+    cfgs = [_fake_cfg("a"), _fake_cfg("b"), _fake_cfg("c")]
+    queries = [Query(c, b, 32) for c in cfgs for b in (2, 4)]
+    many = svc.predict_many(queries)
+    fresh = PredictionService(ab, tracer=_counting_tracer([]))
+    looped = [fresh.predict_one(q.cfg, q.batch, q.seq) for q in queries]
+    assert len(many) == len(queries)
+    for e_many, e_loop in zip(many, looped):
+        np.testing.assert_allclose(e_many["time_s"], e_loop["time_s"])
+        np.testing.assert_allclose(e_many["memory_bytes"],
+                                   e_loop["memory_bytes"])
+
+
+def test_predict_many_accepts_tuples_and_empty():
+    svc = PredictionService(_abacus(), tracer=_counting_tracer([]))
+    assert svc.predict_many([]) == []
+    ests = svc.predict_many([(_fake_cfg(), 2, 32)])
+    assert np.isfinite(ests[0]["time_s"])
+    assert np.isfinite(ests[0]["memory_bytes"])
+
+
+def test_predict_config_goes_through_service_cache():
+    """DNNAbacus.predict_config shares the service's trace cache."""
+    ab = _abacus()
+    calls = []
+    ab._service = PredictionService(ab, tracer=_counting_tracer(calls))
+    cfg = _fake_cfg()
+    e1 = ab.predict_config(cfg, 2, 32)
+    e2 = ab.predict_config(cfg, 2, 32)
+    assert len(calls) == 1
+    assert e1["time_s"] == e2["time_s"]
+    assert "hbm_budget" in e1
+
+
+# -- scheduling bridge -------------------------------------------------------
+
+
+GIB = 2**30
+
+
+def test_service_schedules_predicted_jobs():
+    svc = PredictionService(_abacus(), tracer=_counting_tracer([]))
+    queries = [Query(_fake_cfg(n), b, 32)
+               for n in ("a", "b", "c") for b in (2, 4)]
+    machines = [Machine("m1", 11 * GIB), Machine("m2", 24 * GIB)]
+    span, assign = svc.schedule(queries, machines, plan="ga",
+                                time_scale=50, mem_pad=GIB // 4,
+                                generations=10, seed=0)
+    assert np.isfinite(span)
+    assert len(assign) == len(queries)
+    assert set(assign) <= {0, 1}
+
+
+def test_schedule_jobs_dispatch_and_unknown_plan():
+    jobs = jobs_from_estimates(["j1", "j2"], [1.0, 2.0], [GIB, GIB],
+                               time_scale=10, mem_pad=0.5 * GIB)
+    assert jobs[0].time_s == 10.0 and jobs[0].mem_bytes == 1.5 * GIB
+    machines = [Machine("m1", 4 * GIB)]
+    span, _ = schedule_jobs(jobs, machines, plan="optimal")
+    assert span == 30.0
+    with pytest.raises(ValueError):
+        schedule_jobs(jobs, machines, plan="nope")
+
+
+# -- end-to-end with the real tracer (reduced LM config) ---------------------
+
+
+def test_predict_many_equals_predict_config_real_trace():
+    from repro.configs import get_config, reduced_config
+    ab = _abacus()
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    queries = [Query(cfg, 2, 32), Query(cfg, 4, 32)]
+    many = ab.service().predict_many(queries)
+    looped = [ab.predict_config(cfg, 2, 32), ab.predict_config(cfg, 4, 32)]
+    for e_many, e_loop in zip(many, looped):
+        np.testing.assert_allclose(e_many["time_s"], e_loop["time_s"])
+        np.testing.assert_allclose(e_many["memory_bytes"],
+                                   e_loop["memory_bytes"])
+    # the looped predict_config calls hit the predict_many traces
+    assert ab.service().cache_info()["misses"] == 2

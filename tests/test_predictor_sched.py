@@ -59,6 +59,7 @@ def test_abacus_save_load_roundtrip(tmp_path):
     np.testing.assert_allclose(m1, m2)
 
 
+@pytest.mark.slow  # WL embedding refit is the suite's slowest predictor test
 def test_graph_embedding_variant_fits():
     recs = _synthetic_records(60)
     ab = DNNAbacus(representation="ge").fit(recs, candidate_factory=_factory)

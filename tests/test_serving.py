@@ -11,6 +11,9 @@ from repro.configs import get_config, reduced_config
 from repro.models import build_model
 from repro.serve.engine import DecodeEngine
 
+# compiles prefill/decode for three archs: tier-2 only
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-370m",
                                   "jamba-v0.1-52b"])

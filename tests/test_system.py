@@ -2,6 +2,7 @@
 AutoML predictor -> schedule, plus the launcher admission-control path."""
 
 import numpy as np
+import pytest
 
 from repro.core.automl.models import (GradientBoostingRegressor,
                                       RandomForestRegressor, RidgeRegressor)
@@ -10,6 +11,9 @@ from repro.core.profiler import profile_zoo
 from repro.core.scheduler import Job, Machine, schedule_ga, schedule_random
 
 GIB = 2**30
+
+# profiles + compiles real train steps end to end: tier-2 only
+pytestmark = pytest.mark.slow
 
 
 def _factory(seed):
