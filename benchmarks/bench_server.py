@@ -1,0 +1,188 @@
+"""AbacusServer: micro-batched concurrent serving vs the serial loop.
+
+Three measurements on one query mix (reduced LM configs):
+
+  * **cold vs warm process start** — a fresh process against an empty
+    ``TraceStore`` pays every trace; a second fresh process against the
+    populated store answers the same mix with ZERO traces (asserted).
+  * **serial vs micro-batched throughput** — one-query-at-a-time
+    ``PredictionService.predict_one`` loop vs concurrent clients
+    submitting to ``AbacusServer`` (whose worker coalesces everything
+    pending into one ensemble pass per tick). Acceptance floor:
+    batched/serial >= 5x on a warm cache.
+  * **throughput vs client concurrency** — queries/s as the number of
+    submitting threads grows.
+
+``--smoke`` keeps the mix tiny (seconds, CI tier-1); results are
+emitted to ``BENCH_server.json`` either way.
+
+    PYTHONPATH=src python benchmarks/bench_server.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.automl.models import RandomForestRegressor, RidgeRegressor
+from repro.core.features import ProfileRecord
+from repro.core.predictor import DNNAbacus
+from repro.serve import AbacusServer, PredictionService, Query, TraceStore
+from repro.serve.prediction_service import trace_query
+
+
+def _synthetic_records(n=80, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for i in range(n):
+        batch = int(rng.choice([2, 4, 8, 16]))
+        seq = int(rng.choice([32, 64, 128]))
+        layers = int(rng.integers(2, 16))
+        dots = float(rng.integers(4, 60))
+        flops = batch * seq * dots * 1e6
+        edges = {("dot", "add"): dots, ("add", "tanh"): dots,
+                 ("tanh", "dot"): dots - 1}
+        recs.append(ProfileRecord(
+            model_name=f"m{i}", family="dense", batch_size=batch,
+            input_size=seq, channels=64, learning_rate=1e-3, epoch=1,
+            optimizer="adamw", layers=layers, flops=flops,
+            params=int(dots * 1e5), nsm_edges=edges,
+            time_s=flops / 5e10, mem_bytes=1e6 * dots + 4.0 * batch * seq))
+    return recs
+
+
+def _fit_abacus(seed=0):
+    fac = lambda s: [RandomForestRegressor(n_trees=10, seed=s),
+                     RidgeRegressor()]
+    return DNNAbacus(seed=seed).fit(_synthetic_records(seed=seed),
+                                    candidate_factory=fac)
+
+
+def _query_mix(smoke: bool):
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    if smoke:
+        return [Query(cfg, b, s) for b in (2, 4) for s in (32, 64)]
+    cfg2 = reduced_config(get_config("chatglm3-6b"))
+    return ([Query(cfg, b, s) for b in (2, 4, 8) for s in (32, 64)]
+            + [Query(cfg2, b, 32) for b in (2, 4)])
+
+
+def _drain_concurrent(server: AbacusServer, queries, n_clients: int) -> float:
+    """Wall time for ``n_clients`` threads to submit + await ``queries``."""
+    shares = [s for s in (queries[i::n_clients] for i in range(n_clients))
+              if s]  # small workloads: fewer live clients than requested
+    barrier = threading.Barrier(len(shares) + 1)
+
+    def client(share):
+        barrier.wait()
+        for f in server.submit_many(share):
+            f.result(60)
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in shares]
+    for t in threads:
+        t.start()
+    barrier.wait()  # all clients poised: start the clock together
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = True, reps: int = 25, out: str = "BENCH_server.json"):
+    ab = _fit_abacus()
+    mix = _query_mix(smoke)
+    root = tempfile.mkdtemp(prefix="abacus_store_")
+    rows = []
+    try:
+        # -- cold process start: empty store, every query traces ------------
+        svc_cold = PredictionService(ab, store=TraceStore(root))
+        with AbacusServer(svc_cold) as srv:
+            t0 = time.perf_counter()
+            srv.predict_many(mix)
+            cold_start_s = time.perf_counter() - t0
+        assert svc_cold.stats.traces == len(mix)
+
+        # -- warm process start: NEW service (fresh memory cache), same
+        #    store — zero traces, by construction and by assertion --------
+        traced = []
+        def counting_tracer(cfg, batch, seq):
+            traced.append(1)
+            return trace_query(cfg, batch, seq)
+        svc_warm = PredictionService(ab, store=TraceStore(root),
+                                     tracer=counting_tracer)
+        with AbacusServer(svc_warm) as srv:
+            t0 = time.perf_counter()
+            srv.predict_many(mix)
+            warm_start_s = time.perf_counter() - t0
+        assert not traced, f"warm start re-traced {len(traced)} queries"
+
+        # -- serial one-at-a-time loop vs micro-batched concurrent ----------
+        workload = mix * reps
+        t0 = time.perf_counter()
+        for q in workload:
+            svc_warm.predict_one(q.cfg, q.batch, q.seq)
+        serial_s = time.perf_counter() - t0
+        serial_qps = len(workload) / serial_s
+
+        qps_by_clients = {}
+        with AbacusServer(svc_warm) as srv:
+            for n_clients in (1, 2, 4, 8):
+                dt = _drain_concurrent(srv, workload, n_clients)
+                qps_by_clients[n_clients] = len(workload) / dt
+            mean_batch = srv.stats.mean_batch
+        batched_qps = max(qps_by_clients.values())
+
+        rows = [
+            ("n_unique_queries", float(len(mix))),
+            ("workload", float(len(workload))),
+            ("cold_start_s", cold_start_s),
+            ("warm_start_s", warm_start_s),
+            ("warm_start_speedup", cold_start_s / warm_start_s),
+            ("warm_start_traces", float(len(traced))),
+            ("serial_qps", serial_qps),
+            ("batched_qps", batched_qps),
+            ("batched_vs_serial", batched_qps / serial_qps),
+            ("mean_microbatch", mean_batch),
+        ] + [(f"qps_{c}_clients", q) for c, q in qps_by_clients.items()]
+
+        if out:
+            payload = {name: val for name, val in rows}
+            payload["smoke"] = smoke
+            with open(out, "w") as f:
+                json.dump(payload, f, indent=2)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny query mix (seconds; CI tier-1)")
+    ap.add_argument("--reps", type=int, default=25)
+    ap.add_argument("--out", default="BENCH_server.json")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, reps=args.reps, out=args.out)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    speedup = dict(rows)["batched_vs_serial"]
+    if speedup < 5.0:
+        print(f"# FAIL: micro-batched throughput {speedup:.2f}x serial "
+              "(floor 5x)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

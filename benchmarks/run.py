@@ -23,6 +23,7 @@ BENCHES = [
     ("unseen", "benchmarks.bench_unseen"),              # Fig 13
     ("scheduling", "benchmarks.bench_scheduling"),      # Fig 14 / §4.3
     ("service", "benchmarks.bench_service"),            # online query engine
+    ("server", "benchmarks.bench_server"),              # micro-batched gateway
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
 

@@ -6,6 +6,11 @@ algorithm — comparing against optimal and random placement. Saves the
 fitted predictor for the launcher's admission control
 (``python -m repro.launch.train --predict``).
 
+Online queries then go through the serving subsystem: a persistent
+``TraceStore`` (so re-running this script warm-starts from prior
+traces), the micro-batched ``AbacusServer`` gateway, and an
+``AdmissionController`` placing two arrival waves incrementally.
+
     PYTHONPATH=src python examples/predict_and_schedule.py
 """
 
@@ -23,7 +28,8 @@ from repro.core.predictor import DNNAbacus
 from repro.core.profiler import profile_zoo
 from repro.core.scheduler import (Machine, jobs_from_estimates, schedule_ga,
                                   schedule_jobs)
-from repro.serve.prediction_service import PredictionService, Query
+from repro.serve import (AbacusServer, AdmissionController,
+                         PredictionService, Query, TraceStore)
 
 GIB = 2**30
 
@@ -44,8 +50,9 @@ def main():
     abacus.save("artifacts/abacus")
     print("predictor saved to artifacts/abacus.json")
 
-    # all online queries go through the batched, trace-caching service
-    service = PredictionService(abacus)
+    # all online queries go through the batched, trace-caching service,
+    # backed by a persistent store: re-running this script warm-starts
+    service = PredictionService(abacus, store=TraceStore("artifacts/trace_store"))
 
     # 20 jobs with predicted cost — one design matrix, one ensemble pass
     rng = np.random.default_rng(0)
@@ -66,22 +73,40 @@ def main():
     print(f"  GA generations to best: {int(np.argmin(hist)) + 1}")
     print(f"  assignment: {assign}")
 
-    # admission-control queries on LM configs: cold traces vs cached
+    # admission-control queries on LM configs now go through the async
+    # micro-batched gateway: concurrent submissions coalesce into one
+    # ensemble pass, cold traces run on the trace pool, and the backing
+    # TraceStore makes the *next process* answer them with zero traces.
     from repro.configs import get_config, reduced_config
     cfg = reduced_config(get_config("qwen2-0.5b"))
     queries = [Query(cfg, b, 32) for b in (2, 4)]
-    t0 = time.perf_counter()
-    service.predict_many(queries)
-    cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    ests = service.predict_many(queries)
-    warm = time.perf_counter() - t0
-    print("== admission control (PredictionService) ==")
-    for e in ests:
-        print(f"  {e['model']}: {e['time_s']*1e3:.1f} ms, "
-              f"{e['memory_bytes']/GIB:.2f} GiB, admitted={e['admitted']}")
-    print(f"  cold {cold*1e3:.0f} ms -> warm {warm*1e3:.1f} ms "
-          f"(cache {service.cache_info()})")
+    with AbacusServer(service) as server:
+        t0 = time.perf_counter()
+        server.predict_many(queries)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ests = server.predict_many(queries)
+        warm = time.perf_counter() - t0
+        print("== admission control (AbacusServer gateway) ==")
+        for e in ests:
+            print(f"  {e['model']}: {e['time_s']*1e3:.1f} ms, "
+                  f"{e['memory_bytes']/GIB:.2f} GiB, admitted={e['admitted']}")
+        print(f"  cold {cold*1e3:.0f} ms -> warm {warm*1e3:.1f} ms "
+              f"(server {server.server_info()})")
+
+        # streaming admission: two waves placed incrementally against
+        # rolling cluster state (committed busy time + reserved HBM)
+        ctl = AdmissionController(server, machines, time_scale=100,
+                                  mem_pad=GIB // 2, generations=10, seed=0)
+        print("== streaming admission (AdmissionController) ==")
+        for wave, bs in enumerate(((2, 4), (2, 2, 4))):
+            verdicts = ctl.admit([Query(cfg, b, 32) for b in bs])
+            for v in verdicts:
+                where = v.machine if v.admitted else f"REJECTED ({v.reason})"
+                print(f"  wave{wave} {v.job_id}: {where}")
+        state = ctl.cluster_state()
+        print(f"  cluster makespan {state['makespan_s']:.1f} s, "
+              f"{state['resident_jobs']} resident jobs")
 
 
 if __name__ == "__main__":

@@ -68,18 +68,24 @@ class DNNAbacus:
         return {"time_mre": mre(t_pred, t), "mem_mre": mre(m_pred, m)}
 
     # -- launcher integration ------------------------------------------------
-    def service(self) -> "object":
+    def service(self, store=None) -> "object":
         """The (lazily created) PredictionService fronting this predictor.
 
         All online queries go through it: repeated (config, batch, seq)
         questions hit its trace cache instead of re-building the model.
-        For custom options (budget, cache size, tracer) construct a
+        ``store`` (a ``repro.serve.trace_store.TraceStore``) backs the
+        cache with cross-process persistence; it only takes effect when
+        the service is first created (or has no store yet) — an already
+        attached store is never silently swapped out. For other custom
+        options (budget, cache size, tracer) construct a
         ``PredictionService`` directly — recreating it here would throw
         away the warm trace cache.
         """
         if self._service is None:
             from repro.serve.prediction_service import PredictionService
-            self._service = PredictionService(self)
+            self._service = PredictionService(self, store=store)
+        elif store is not None and self._service.store is None:
+            self._service.store = store
         return self._service
 
     def predict_config(self, cfg, batch: int, seq: int) -> Dict:

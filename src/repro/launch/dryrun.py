@@ -125,9 +125,11 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 service=None) -> Dict:
     """Lower + compile one cell; return roofline record (§Dry-run/§Roofline).
 
-    With a ``PredictionService``, train cells also carry the DNNAbacus
-    (predicted) step time/memory next to the roofline numbers — repeated
-    sweeps over the grid hit the service's trace cache.
+    ``service`` is anything with ``predict_one(cfg, batch, seq)`` — a
+    ``PredictionService`` or the micro-batched ``AbacusServer`` gateway.
+    Train cells then carry the DNNAbacus (predicted) step time/memory
+    next to the roofline numbers; repeated sweeps hit the trace cache,
+    and with a ``TraceStore`` behind it, fresh processes warm-start.
     """
     cfg = get_config(arch)
     shp = SHAPES[shape_name]
@@ -193,13 +195,22 @@ def main(argv=None) -> int:
     ap.add_argument("--predict", action="store_true",
                     help="attach DNNAbacus estimates to train cells")
     ap.add_argument("--predictor-path", default="artifacts/abacus")
+    ap.add_argument("--trace-store", default="artifacts/trace_store",
+                    help="persistent trace dir ('' disables): repeated "
+                         "dry-runs warm-start instead of re-tracing")
     args = ap.parse_args(argv)
 
-    service = None
+    service = server = None
     if args.predict:
         from repro.core.predictor import DNNAbacus
+        from repro.serve.server import AbacusServer
+        from repro.serve.trace_store import TraceStore
         if os.path.exists(args.predictor_path + ".json"):
-            service = DNNAbacus.load(args.predictor_path).service()
+            store = TraceStore(args.trace_store) if args.trace_store else None
+            service = DNNAbacus.load(args.predictor_path).service(store=store)
+            # estimates go through the micro-batched gateway, sharing its
+            # trace cache (and store) with any concurrent admission loop
+            server = AbacusServer(service).start()
         else:
             print(f"[dryrun] no fitted predictor at {args.predictor_path}; "
                   "skipping estimates", file=sys.stderr)
@@ -208,21 +219,27 @@ def main(argv=None) -> int:
     shapes = [args.shape] if args.shape else list(SHAPES)
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     failures = 0
-    for arch in archs:
-        for shape_name in shapes:
-            for mp in meshes:
-                try:
-                    rec = dryrun_cell(arch, shape_name, multi_pod=mp,
-                                      scheme=args.scheme, service=service)
-                except Exception as e:  # a failure here is a sharding bug
-                    rec = {"arch": arch, "shape": shape_name, "multi_pod": mp,
-                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
-                    failures += 1
-                    print(f"[dryrun] FAILED {arch} x {shape_name} mp={mp}: "
-                          f"{rec['error'][:500]}", file=sys.stderr)
-                if args.out:
-                    with open(args.out, "a") as f:
-                        f.write(json.dumps(rec) + "\n")
+    try:
+        for arch in archs:
+            for shape_name in shapes:
+                for mp in meshes:
+                    try:
+                        rec = dryrun_cell(arch, shape_name, multi_pod=mp,
+                                          scheme=args.scheme,
+                                          service=server or service)
+                    except Exception as e:  # a failure here is a sharding bug
+                        rec = {"arch": arch, "shape": shape_name,
+                               "multi_pod": mp, "status": "FAILED",
+                               "error": f"{type(e).__name__}: {e}"}
+                        failures += 1
+                        print(f"[dryrun] FAILED {arch} x {shape_name} mp={mp}: "
+                              f"{rec['error'][:500]}", file=sys.stderr)
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps(rec) + "\n")
+    finally:
+        if server is not None:
+            server.stop()
     return 1 if failures else 0
 
 

@@ -1,0 +1,164 @@
+"""Admission bridge: streaming queries -> incremental GA placement (§4.3).
+
+``PredictionService.schedule`` answers the paper's one-shot question —
+place N known jobs on an empty cluster. A scheduler front door sees a
+*stream*: queries arrive in waves while earlier admissions are still
+running, so each wave must be placed against the cluster's **current**
+load, not a blank slate.
+
+``AdmissionController`` keeps that rolling state — per-machine committed
+busy time and HBM reserved by resident jobs — and turns each wave of
+queries into an incremental placement: estimates come from the
+micro-batched ``AbacusServer`` (or a bare ``PredictionService``), jobs
+whose predicted memory cannot fit any machine's *residual* HBM are
+rejected up front, and the rest are placed by ``repro.core.scheduler``
+with the committed load as the optimization baseline (``base_time`` /
+``reserved_mem``). ``complete(job_id)`` releases a finished job's
+reservation so later waves see the freed capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.scheduler import Machine, jobs_from_estimates, schedule_jobs
+from repro.serve.prediction_service import Query
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """One query's admission outcome."""
+    job_id: str
+    model: str
+    admitted: bool
+    machine: Optional[str]      # None iff rejected
+    time_s: float
+    mem_bytes: float
+    reason: str = ""            # non-empty iff rejected
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class AdmissionController:
+    """Rolling cluster state + incremental placement for query streams.
+
+    ``predictor`` is anything with ``predict_many(queries) -> [est]`` —
+    an ``AbacusServer`` (micro-batched, the production path) or a
+    ``PredictionService`` (synchronous). Thread-safe: concurrent
+    ``admit``/``complete`` calls serialize on one lock so reservations
+    never double-commit a machine's HBM.
+    """
+
+    def __init__(self, predictor, machines: Sequence[Machine],
+                 plan: str = "ga", time_scale: float = 1.0,
+                 mem_pad: float = 0.0, **plan_kw):
+        self.predictor = predictor
+        self.machines = list(machines)
+        self.plan = plan
+        self.time_scale = float(time_scale)
+        self.mem_pad = float(mem_pad)
+        self.plan_kw = dict(plan_kw)
+        self._busy = np.zeros(len(self.machines))      # committed time
+        self._reserved = np.zeros(len(self.machines))  # committed HBM
+        self._resident: Dict[str, tuple] = {}          # job_id -> (m_idx, Job)
+        self._ids = itertools.count()
+        self._lock = threading.Lock()
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, queries: Sequence) -> List[Verdict]:
+        """Place one wave of queries against current cluster state."""
+        qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
+        if not qs:
+            return []
+        ests = self.predictor.predict_many(qs)
+        names = [f"{e['model']}#{next(self._ids)}" for e in ests]
+        jobs = jobs_from_estimates(
+            names, [e["time_s"] for e in ests],
+            [e["memory_bytes"] for e in ests],
+            time_scale=self.time_scale, mem_pad=self.mem_pad)
+        with self._lock:
+            # reject jobs no machine can host at current residual HBM —
+            # the placement plans treat them as globally infeasible.
+            placeable, verdicts = [], [None] * len(jobs)
+            for i, job in enumerate(jobs):
+                residual = [m.hbm_bytes - self._reserved[k]
+                            for k, m in enumerate(self.machines)]
+                if job.mem_bytes <= max(residual):
+                    placeable.append(i)
+                else:
+                    verdicts[i] = Verdict(
+                        job_id=job.name, model=ests[i]["model"],
+                        admitted=False, machine=None,
+                        time_s=jobs[i].time_s, mem_bytes=job.mem_bytes,
+                        reason=f"needs {job.mem_bytes:.3g} B; max residual "
+                               f"HBM {max(residual):.3g} B")
+            if placeable:
+                sub = [jobs[i] for i in placeable]
+                _, assign = schedule_jobs(
+                    sub, self.machines, plan=self.plan,
+                    base_time=self._busy.copy(),
+                    reserved_mem=self._reserved.copy(), **self.plan_kw)
+                for i, a in zip(placeable, assign):
+                    a = int(a)
+                    # guard: a stochastic plan (GA) can hand back an
+                    # assignment violating residual HBM, and commits
+                    # earlier in this wave shrink it further — repair
+                    # onto the least-busy machine that can still host
+                    # the job, or reject if none remains.
+                    job = jobs[i]
+                    if (job.mem_bytes + self._reserved[a]
+                            > self.machines[a].hbm_bytes):
+                        ok = [k for k, mc in enumerate(self.machines)
+                              if job.mem_bytes + self._reserved[k]
+                              <= mc.hbm_bytes]
+                        if not ok:
+                            verdicts[i] = Verdict(
+                                job_id=job.name, model=ests[i]["model"],
+                                admitted=False, machine=None,
+                                time_s=job.time_s, mem_bytes=job.mem_bytes,
+                                reason="no residual HBM after earlier "
+                                       "placements in this wave")
+                            continue
+                        a = min(ok, key=lambda k: self._busy[k])
+                    m = self.machines[a]
+                    self._busy[a] += job.time_s / m.speed
+                    self._reserved[a] += job.mem_bytes
+                    self._resident[job.name] = (a, job)
+                    verdicts[i] = Verdict(
+                        job_id=job.name, model=ests[i]["model"],
+                        admitted=True, machine=m.name,
+                        time_s=job.time_s, mem_bytes=job.mem_bytes)
+        return verdicts
+
+    def complete(self, job_id: str) -> None:
+        """Release a finished job's time/memory reservation."""
+        with self._lock:
+            if job_id not in self._resident:
+                raise KeyError(f"unknown or already-completed job {job_id!r}")
+            k, job = self._resident.pop(job_id)
+            self._busy[k] = max(0.0, self._busy[k]
+                                - job.time_s / self.machines[k].speed)
+            self._reserved[k] = max(0.0, self._reserved[k] - job.mem_bytes)
+
+    # -- introspection ------------------------------------------------------
+    def cluster_state(self) -> Dict:
+        with self._lock:
+            return {
+                "machines": [
+                    {"name": m.name,
+                     "busy_s": float(self._busy[k]),
+                     "reserved_bytes": float(self._reserved[k]),
+                     "residual_bytes": float(m.hbm_bytes - self._reserved[k]),
+                     "jobs": sorted(j for j, (a, _) in self._resident.items()
+                                    if a == k)}
+                    for k, m in enumerate(self.machines)],
+                "resident_jobs": len(self._resident),
+                "makespan_s": float(self._busy.max()) if len(self._busy)
+                              else 0.0,
+            }

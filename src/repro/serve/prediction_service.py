@@ -26,6 +26,7 @@ edges, featurization happens at predict time).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import json
 import threading
@@ -47,13 +48,75 @@ class Query:
     seq: int
 
 
+def _canonical(value):
+    """Recursively reduce ``value`` to JSON-safe, process-stable primitives.
+
+    ``json.dumps(..., default=str)`` is NOT stable across processes: any
+    object whose ``str`` embeds ``id()`` (the ``<Foo object at 0x..>``
+    default repr) fingerprints differently per process, and sets iterate
+    in hash-seed order. Tuples and lists are also kept distinct here
+    (JSON flattens both to arrays), so ``(1, 2)`` and ``[1, 2]`` config
+    fields cannot collide into one cache entry.
+    """
+    if value is None or isinstance(value, (bool, int, float, str)):
+        return value
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        return {f.name: _canonical(getattr(value, f.name))
+                for f in dataclasses.fields(value)}
+    if isinstance(value, tuple):
+        return {"__tuple__": [_canonical(v) for v in value]}
+    if isinstance(value, list):
+        return [_canonical(v) for v in value]
+    if isinstance(value, (set, frozenset)):
+        items = [json.dumps(_canonical(v), sort_keys=True) for v in value]
+        return {"__set__": sorted(items)}
+    if isinstance(value, dict):
+        items = [(json.dumps(_canonical(k), sort_keys=True), _canonical(v))
+                 for k, v in value.items()]
+        return {"__dict__": sorted(items, key=lambda kv: kv[0])}
+    if isinstance(value, bytes):
+        return {"__bytes__": value.hex()}
+    if hasattr(value, "dtype") and hasattr(value, "ndim"):  # numpy
+        if value.ndim == 0:  # scalar (or 0-d array): plain python value
+            return _canonical(value.item())
+        return {"__ndarray__": _canonical(value.tolist()),
+                "dtype": str(value.dtype)}
+    if isinstance(value, functools.partial):
+        return {"__partial__": [_canonical(value.func),
+                                _canonical(value.args),
+                                _canonical(dict(value.keywords))]}
+    if isinstance(value, type) or callable(value):
+        qn = getattr(value, "__qualname__", None)
+        if qn is not None:  # named function/class: a stable identity
+            return {"__name__": f"{getattr(value, '__module__', '')}.{qn}"}
+        # callable *instances* (objects defining __call__) fall through to
+        # the attrs-based last resort — their repr embeds id()
+    # last resort: type identity + public attributes (never id()-bearing repr)
+    cls = type(value)
+    tag = f"{cls.__module__}.{cls.__qualname__}"
+    try:
+        attrs = {k: _canonical(v) for k, v in sorted(vars(value).items())
+                 if not k.startswith("_")}
+    except TypeError:
+        s = str(value)
+        if " at 0x" in s:  # default repr embeds id(): type identity only
+            return {"__obj__": tag}
+        return {"__obj__": tag, "str": s}
+    return {"__obj__": tag, "attrs": attrs}
+
+
 def config_fingerprint(cfg) -> str:
-    """Content hash over every config field (stable across processes)."""
+    """Content hash over every config field (stable across processes).
+
+    The payload is canonicalized recursively (``_canonical``) before
+    hashing, so nested tuples/sets/objects hash identically in every
+    process — the persistent ``TraceStore`` depends on this key.
+    """
     if dataclasses.is_dataclass(cfg):
-        payload = dataclasses.asdict(cfg)
+        payload = _canonical(cfg)
     else:  # duck-typed config (tests): hash its public attributes
-        payload = {k: v for k, v in sorted(vars(cfg).items())}
-    blob = json.dumps(payload, sort_keys=True, default=str)
+        payload = {k: _canonical(v) for k, v in sorted(vars(cfg).items())}
+    blob = json.dumps(payload, sort_keys=True)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
@@ -82,9 +145,12 @@ def trace_query(cfg, batch: int, seq: int) -> ProfileRecord:
 
 @dataclasses.dataclass
 class ServiceStats:
-    hits: int = 0
-    misses: int = 0
+    hits: int = 0         # served from the in-memory cache
+    misses: int = 0       # not in memory (filled by store load or trace)
     evictions: int = 0
+    store_hits: int = 0     # misses answered by the persistent TraceStore
+    traces: int = 0         # misses that actually ran the tracer
+    store_errors: int = 0   # failed write-throughs (served memory-only)
 
     @property
     def queries(self) -> int:
@@ -92,7 +158,13 @@ class ServiceStats:
 
     def as_dict(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "queries": self.queries}
+                "evictions": self.evictions, "store_hits": self.store_hits,
+                "traces": self.traces, "store_errors": self.store_errors,
+                "queries": self.queries}
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+        self.store_hits = self.traces = self.store_errors = 0
 
 
 class PredictionService:
@@ -100,11 +172,13 @@ class PredictionService:
 
     def __init__(self, abacus, max_cache_entries: int = 1024,
                  hbm_budget: float = HBM_PER_DEVICE,
-                 tracer: Callable[..., ProfileRecord] = trace_query):
+                 tracer: Callable[..., ProfileRecord] = trace_query,
+                 store=None):
         self.abacus = abacus
         self.hbm_budget = float(hbm_budget)
         self.max_cache_entries = max_cache_entries
         self._tracer = tracer  # injectable: tests count trace calls
+        self.store = store  # optional TraceStore: cross-process persistence
         self._cache: "OrderedDict[CacheKey, ProfileRecord]" = OrderedDict()
         self._inflight: Dict[CacheKey, threading.Event] = {}
         self._lock = threading.Lock()
@@ -120,6 +194,10 @@ class PredictionService:
         Concurrent identical queries are deduplicated: one thread runs
         the trace, the rest wait on its in-flight event and read the
         cache — a burst of N equal queries costs one trace, not N.
+
+        With a backing ``TraceStore``, a memory miss first tries the
+        store (a prior process may have traced this key) and only then
+        runs the tracer; fresh traces are written through to the store.
         """
         key = self.cache_key(cfg, batch, seq)
         while True:
@@ -137,7 +215,21 @@ class PredictionService:
                     break
             ev.wait()  # another thread is tracing this key; then re-check
         try:
-            rec = self._tracer(cfg, batch, seq)
+            rec = self.store.get(key) if self.store is not None else None
+            if rec is not None:  # warm start: a prior process traced this
+                with self._lock:
+                    self.stats.store_hits += 1
+            else:
+                rec = self._tracer(cfg, batch, seq)
+                with self._lock:
+                    self.stats.traces += 1
+                if self.store is not None:
+                    try:
+                        self.store.put(key, rec)
+                    except Exception:  # full/read-only disk: the store is
+                        with self._lock:  # an accelerator, never a gate —
+                            self.stats.store_errors += 1  # stay memory-only
+
             with self._lock:
                 self._cache[key] = rec
                 self._cache.move_to_end(key)
@@ -151,12 +243,29 @@ class PredictionService:
         return rec
 
     def cache_info(self) -> Dict[str, int]:
+        """Counters, with in-memory entries distinct from store entries."""
+        store_entries = len(self.store) if self.store is not None else 0
         with self._lock:
-            return {"entries": len(self._cache), **self.stats.as_dict()}
+            return {"entries": len(self._cache),
+                    "store_entries": store_entries,
+                    **self.stats.as_dict()}
 
-    def clear_cache(self) -> None:
+    def clear_cache(self, reset_stats: bool = False) -> None:
+        """Drop cached records AND wake/forget in-flight traces.
+
+        Waiters blocked on an in-flight event re-check the cache, find
+        neither entry nor event, and become tracers themselves — a clear
+        mid-trace costs at most one duplicate trace, never a deadlock.
+        The backing store (if any) is NOT cleared: it is the durable
+        layer shared with other processes (``store.clear()`` is explicit).
+        """
         with self._lock:
             self._cache.clear()
+            inflight, self._inflight = self._inflight, {}
+            if reset_stats:
+                self.stats.reset()
+        for ev in inflight.values():
+            ev.set()
 
     # -- queries ------------------------------------------------------------
     def _estimate(self, rec: ProfileRecord, t: float, m: float) -> Dict:

@@ -1,0 +1,256 @@
+"""AbacusServer: async micro-batched admission gateway (paper §4.3 at scale).
+
+``PredictionService`` answers queries synchronously, one caller at a
+time. In the datacenter setting the paper targets, admission queries
+arrive concurrently from many tenants; serving them serially wastes the
+two batchable stages — the ensemble pass (one design matrix amortizes N
+queries) and cold trace misses (independent, thread-parallel).
+
+``AbacusServer`` mirrors the continuous-batching shape of
+``repro.serve.engine.DecodeEngine``: clients ``submit()`` queries into a
+queue and get a ``Future``; a single worker thread wakes, coalesces
+*everything* pending into one micro-batch per tick, resolves cold
+misses concurrently on a trace pool, runs ONE ensemble pass for the
+whole batch, and resolves each future with its admission verdict.
+
+    with AbacusServer(service) as srv:
+        futs = [srv.submit(cfg, b, 2048) for b in (8, 16, 32)]
+        ests = [f.result() for f in futs]          # admission verdicts
+
+A burst of N identical queries costs one trace (the service's in-flight
+dedup) and one ensemble pass (the micro-batch); distinct cold queries
+trace concurrently instead of serially inside ``predict_many``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.serve.prediction_service import PredictionService, Query
+
+
+@dataclasses.dataclass
+class ServerStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    ticks: int = 0             # micro-batches served
+    ensemble_passes: int = 0   # abacus.predict calls (== ticks served)
+    max_batch: int = 0         # largest micro-batch coalesced
+    cold_traces: int = 0       # unique keys traced on the pool
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    @property
+    def mean_batch(self) -> float:
+        return self.completed / self.ticks if self.ticks else 0.0
+
+
+class AbacusServer:
+    """Event-loop front door over a ``PredictionService``.
+
+    One worker thread owns the micro-batch loop; ``trace_workers``
+    bounds the thread pool used for concurrent cold-miss traces.
+    ``max_batch`` caps how many queued queries one tick coalesces
+    (backpressure: the rest stay queued for the next tick).
+    """
+
+    def __init__(self, service: PredictionService, max_batch: int = 256,
+                 trace_workers: int = 4):
+        self.service = service
+        self.max_batch = int(max_batch)
+        self.trace_workers = int(trace_workers)
+        self.stats = ServerStats()
+        self._queue: Deque[Tuple[Query, Future]] = deque()
+        self._cond = threading.Condition()
+        self._worker: Optional[threading.Thread] = None
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._running = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "AbacusServer":
+        if self._running:
+            return self
+        if self._worker is not None and self._worker.is_alive():
+            raise RuntimeError("previous worker is still draining; "
+                               "call stop() again once it finishes")
+        self._running = True
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(max_workers=self.trace_workers,
+                                            thread_name_prefix="abacus-trace")
+        self._worker = threading.Thread(target=self._loop,
+                                        name="abacus-server", daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        """Drain-then-stop: queued queries are served before shutdown.
+
+        If the worker does not finish draining within ``timeout`` it is
+        left running (it still exits after its current batch); the trace
+        pool and queue are only torn down once the worker is gone —
+        tearing them down under a live worker would strand its batch.
+        """
+        with self._cond:
+            if not self._running and self._worker is None:
+                return
+            self._running = False
+            self._cond.notify_all()
+        worker = self._worker
+        if worker is not None:
+            worker.join(timeout)
+            if worker.is_alive():  # still draining: do not yank the pool
+                return
+            self._worker = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        # anything still queued after the drain tick fails loudly
+        with self._cond:
+            leftovers, self._queue = list(self._queue), deque()
+        for _, fut in leftovers:
+            if not fut.done():
+                try:
+                    fut.set_exception(RuntimeError("AbacusServer stopped"))
+                except Exception:
+                    pass  # client cancelled it first
+
+    def __enter__(self) -> "AbacusServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    @property
+    def running(self) -> bool:
+        return self._running
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, cfg, batch: int, seq: int) -> Future:
+        """Enqueue one admission query; resolves to the estimate dict."""
+        fut: Future = Future()
+        q = Query(cfg, int(batch), int(seq))
+        with self._cond:
+            if not self._running:
+                raise RuntimeError("AbacusServer is not running "
+                                   "(use `with AbacusServer(...)` or start())")
+            self._queue.append((q, fut))
+            self.stats.submitted += 1
+            self._cond.notify()
+        return fut
+
+    def submit_many(self, queries: Sequence) -> List[Future]:
+        qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
+        futs: List[Future] = [Future() for _ in qs]
+        with self._cond:
+            if not self._running:
+                raise RuntimeError("AbacusServer is not running "
+                                   "(use `with AbacusServer(...)` or start())")
+            self._queue.extend(zip(qs, futs))
+            self.stats.submitted += len(qs)
+            self._cond.notify()
+        return futs
+
+    def predict_one(self, cfg, batch: int, seq: int,
+                    timeout: Optional[float] = None) -> Dict:
+        """Synchronous convenience: submit and wait for the verdict."""
+        return self.submit(cfg, batch, seq).result(timeout)
+
+    def predict_many(self, queries: Sequence,
+                     timeout: Optional[float] = None) -> List[Dict]:
+        return [f.result(timeout) for f in self.submit_many(queries)]
+
+    # -- worker loop --------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while self._running and not self._queue:
+                    self._cond.wait()
+                if not self._queue:  # stopped and drained
+                    return
+                batch = [self._queue.popleft()
+                         for _ in range(min(len(self._queue), self.max_batch))]
+            # client-cancelled futures drop out of the batch here; the
+            # rest transition to RUNNING so cancel() can no longer race
+            # our set_result below.
+            live = [(q, fut) for q, fut in batch
+                    if fut.set_running_or_notify_cancel()]
+            try:
+                if live:
+                    self._serve_batch(live)
+            except Exception as e:
+                # catch-all: a tick must never kill the worker — that
+                # would hang every pending and future query silently.
+                for _, fut in live:
+                    if not fut.done():
+                        self.stats.failed += 1
+                        try:
+                            fut.set_exception(e)
+                        except Exception:
+                            pass
+            with self._cond:
+                if not self._running and not self._queue:
+                    return
+
+    def _serve_batch(self, batch: List[Tuple[Query, Future]]) -> None:
+        svc = self.service
+        self.stats.ticks += 1
+        self.stats.max_batch = max(self.stats.max_batch, len(batch))
+        # 1) resolve records: unique keys, cold misses traced concurrently.
+        #    record_for's in-flight dedup makes duplicate keys (within the
+        #    batch or racing with direct service callers) cost one trace.
+        traces_before = svc.stats.traces
+        by_key: Dict[tuple, Future] = {}
+        rec_of, err_of = {}, {}
+        key_of = []
+        for idx, (q, _) in enumerate(batch):
+            try:
+                key = svc.cache_key(q.cfg, q.batch, q.seq)
+            except Exception as e:  # unfingerprintable cfg: fail that query
+                key = ("__badkey__", idx)
+                err_of[key] = e
+                key_of.append(key)
+                continue
+            key_of.append(key)
+            if key not in by_key:
+                by_key[key] = self._pool.submit(
+                    svc.record_for, q.cfg, q.batch, q.seq)
+        for key, f in by_key.items():
+            try:
+                rec_of[key] = f.result()
+            except Exception as e:  # bad config: fail that query, not the tick
+                err_of[key] = e
+        self.stats.cold_traces += svc.stats.traces - traces_before
+        # 2) ONE ensemble pass over the unique resolvable records.
+        uniq = [k for k in by_key if k in rec_of]
+        preds = {}
+        if uniq:
+            try:
+                t_pred, m_pred = svc.predict_records([rec_of[k] for k in uniq])
+                self.stats.ensemble_passes += 1
+                preds = {k: (t, m) for k, t, m in zip(uniq, t_pred, m_pred)}
+            except Exception as e:
+                err_of.update({k: e for k in uniq})
+        # 3) resolve futures with per-query admission verdicts.
+        for (q, fut), key in zip(batch, key_of):
+            if key in preds:
+                t, m = preds[key]
+                self.stats.completed += 1
+                fut.set_result(svc._estimate(rec_of[key], t, m))
+            else:
+                self.stats.failed += 1
+                fut.set_exception(err_of.get(
+                    key, RuntimeError("prediction failed")))
+
+    # -- introspection ------------------------------------------------------
+    def server_info(self) -> Dict:
+        with self._cond:
+            queued = len(self._queue)
+        return {"running": self._running, "queued": queued,
+                "mean_batch": round(self.stats.mean_batch, 2),
+                **self.stats.as_dict(), **self.service.cache_info()}

@@ -1,0 +1,152 @@
+"""Persistent cross-process trace store for the prediction server.
+
+The trace cache in ``PredictionService`` dies with the process, so every
+scheduler restart re-pays the jaxpr trace for every admission query it
+has ever answered. ``TraceStore`` persists traced ``ProfileRecord``s
+(including NSM edges) to disk, content-addressed by the same
+``(config fingerprint, batch, seq)`` key the in-memory cache uses, so a
+fresh process warm-starts from prior traces: load-on-miss, atomic
+write-on-trace.
+
+Layout: one JSON file per key under ``root/``, named
+``<fingerprint>_b<batch>_s<seq>.json``. Each file carries a schema
+version and echoes its own key; loads that fail to parse, carry a
+foreign schema version, or disagree with their filename's key are
+*skipped* (counted, never fatal) — a corrupted or stale file costs one
+re-trace, not a crash. Writes go through a same-directory temp file and
+``os.replace`` so concurrent processes never observe a torn record.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.core.features import ProfileRecord, record_from_json, record_to_json
+
+StoreKey = Tuple[str, int, int]  # (config fingerprint, batch, seq)
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class StoreStats:
+    hits: int = 0        # get() served a record from disk
+    misses: int = 0      # get() found no file
+    writes: int = 0      # put() persisted a record
+    corrupt: int = 0     # files skipped: unparseable / wrong version / bad key
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class TraceStore:
+    """Durable ``(fingerprint, batch, seq) -> ProfileRecord`` map on disk."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.stats = StoreStats()
+        self._lock = threading.Lock()
+
+    # -- key/file mapping ---------------------------------------------------
+    @staticmethod
+    def filename(key: StoreKey) -> str:
+        fp, batch, seq = key
+        return f"{fp}_b{int(batch)}_s{int(seq)}.json"
+
+    def path_for(self, key: StoreKey) -> str:
+        return os.path.join(self.root, self.filename(key))
+
+    @staticmethod
+    def _key_from_payload(payload: Dict) -> StoreKey:
+        fp, batch, seq = payload["key"]
+        return (str(fp), int(batch), int(seq))
+
+    # -- load / save --------------------------------------------------------
+    def get(self, key: StoreKey) -> Optional[ProfileRecord]:
+        """Record for ``key``, or None. Corrupted files are skipped."""
+        path = self.path_for(key)
+        if not os.path.exists(path):
+            with self._lock:
+                self.stats.misses += 1
+            return None
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("version") != SCHEMA_VERSION:
+                raise ValueError(f"schema version {payload.get('version')!r}")
+            if self._key_from_payload(payload) != key:
+                raise ValueError("stored key disagrees with filename")
+            rec = record_from_json(payload["record"])
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            # json.JSONDecodeError is a ValueError; a bad record dict raises
+            # KeyError/TypeError in record_from_json. All are one re-trace.
+            with self._lock:
+                self.stats.corrupt += 1
+                self.stats.misses += 1
+            self._last_error = f"{type(e).__name__}: {e}"
+            return None
+        with self._lock:
+            self.stats.hits += 1
+        return rec
+
+    def put(self, key: StoreKey, rec: ProfileRecord) -> str:
+        """Atomically persist ``rec`` under ``key``; returns the file path."""
+        path = self.path_for(key)
+        payload = {"version": SCHEMA_VERSION,
+                   "key": [key[0], int(key[1]), int(key[2])],
+                   "record": record_to_json(rec)}
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, path)  # atomic on POSIX: readers see old or new
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        with self._lock:
+            self.stats.writes += 1
+        return path
+
+    # -- inventory ----------------------------------------------------------
+    def _files(self) -> List[str]:
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return []
+        return sorted(n for n in names if n.endswith(".json"))
+
+    def __len__(self) -> int:
+        return len(self._files())
+
+    def keys(self) -> Iterator[StoreKey]:
+        """Keys of every loadable record (corrupted files skipped)."""
+        for name in self._files():
+            try:
+                with open(os.path.join(self.root, name)) as f:
+                    payload = json.load(f)
+                if payload.get("version") != SCHEMA_VERSION:
+                    continue
+                yield self._key_from_payload(payload)
+            except (OSError, ValueError, KeyError, TypeError):
+                continue
+
+    def clear(self) -> int:
+        """Delete every stored record; returns how many files were removed."""
+        n = 0
+        for name in self._files():
+            try:
+                os.unlink(os.path.join(self.root, name))
+                n += 1
+            except OSError:
+                pass
+        return n
+
+    def info(self) -> Dict[str, int]:
+        return {"store_entries": len(self), **self.stats.as_dict()}

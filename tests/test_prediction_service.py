@@ -183,6 +183,115 @@ def test_fingerprint_is_content_addressed():
     assert config_fingerprint(cfg) != config_fingerprint(other)
 
 
+class _GnarlyCfg:
+    """Config with every field shape json.dumps(default=str) mangles."""
+
+    def __init__(self):
+        self.name = "gnarly"
+        self.pattern = (("attn", "dense"), ("ssm", "moe"))  # nested tuples
+        self.tags = {"b", "a", "c"}                 # set: hash-seed order
+        self.table = {("k", 1): 2.0, ("k", 0): 1.0}  # non-str dict keys
+        self.opt = object()                          # id()-bearing repr
+
+
+def test_fingerprint_canonicalizes_nested_payloads():
+    assert config_fingerprint(_GnarlyCfg()) == config_fingerprint(_GnarlyCfg())
+
+    class A:
+        def __init__(self):
+            self.x = (1, 2)
+
+    class B:
+        def __init__(self):
+            self.x = [1, 2]
+
+    # tuples and lists must NOT collide into one cache entry
+    assert config_fingerprint(A()) != config_fingerprint(B())
+
+    class C:
+        def __init__(self):
+            self.x = [1, 2, 3]
+
+    assert config_fingerprint(B()) != config_fingerprint(C())
+
+
+def test_fingerprint_numpy_and_callable_fields():
+    import functools
+
+    def _cfg(**fields):
+        class _C:
+            def __init__(self):
+                for k, v in fields.items():
+                    setattr(self, k, v)
+        return _C()
+
+    # multi-element ndarrays fingerprint (no .item() crash), and neither
+    # collide with the equivalent list nor with a bare scalar
+    arr = config_fingerprint(_cfg(w=np.array([256, 512])))
+    assert arr == config_fingerprint(_cfg(w=np.array([256, 512])))
+    assert arr != config_fingerprint(_cfg(w=[256, 512]))
+    assert (config_fingerprint(_cfg(w=np.array([2])))
+            != config_fingerprint(_cfg(w=2)))
+    assert (config_fingerprint(_cfg(w=np.float32(2.0)))
+            == config_fingerprint(_cfg(w=2.0)))
+
+    # functools.partial: content-addressed by (func, args, kwargs), never
+    # by its id()-bearing repr
+    p1 = config_fingerprint(_cfg(act=functools.partial(max, 1)))
+    assert p1 == config_fingerprint(_cfg(act=functools.partial(max, 1)))
+    assert p1 != config_fingerprint(_cfg(act=functools.partial(max, 2)))
+
+    # callable *instances* use their attrs, not '<... object at 0x..>'
+    class _Act:
+        def __init__(self, scale):
+            self.scale = scale
+
+        def __call__(self, x):
+            return x * self.scale
+
+    a1 = config_fingerprint(_cfg(act=_Act(2.0)))
+    assert a1 == config_fingerprint(_cfg(act=_Act(2.0)))
+    assert a1 != config_fingerprint(_cfg(act=_Act(3.0)))
+
+
+def test_fingerprint_stable_across_processes():
+    """The persistent TraceStore key must not depend on hash seed or id().
+
+    A child interpreter with a different PYTHONHASHSEED must fingerprint
+    the same gnarly config (sets, nested tuples, plain objects)
+    identically — ``default=str`` failed this for any field whose str()
+    embeds a memory address.
+    """
+    import os
+    import subprocess
+    import sys
+
+    code = """
+import sys
+sys.path.insert(0, sys.argv[1])
+from repro.serve.prediction_service import config_fingerprint
+
+class _GnarlyCfg:
+    def __init__(self):
+        self.name = "gnarly"
+        self.pattern = (("attn", "dense"), ("ssm", "moe"))
+        self.tags = {"b", "a", "c"}
+        self.table = {("k", 1): 2.0, ("k", 0): 1.0}
+        self.opt = object()
+
+print(config_fingerprint(_GnarlyCfg()))
+"""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    fps = set()
+    for seed in ("0", "1", "12345"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        out = subprocess.run([sys.executable, "-c", code, src],
+                             capture_output=True, text=True, env=env,
+                             check=True)
+        fps.add(out.stdout.strip())
+    assert fps == {config_fingerprint(_GnarlyCfg())}
+
+
 def test_lru_eviction_bounds_cache():
     calls = []
     svc = PredictionService(_abacus(), max_cache_entries=2,

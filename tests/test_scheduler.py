@@ -51,3 +51,43 @@ def test_ga_avoids_oom_assignments():
     assert np.isfinite(ga)
     for i in range(3):
         assert assign[i] == 1
+
+
+def test_makespan_with_base_load_and_reserved_mem():
+    jobs = [Job("j", 10.0, 5 * GIB)]
+    # committed busy time shifts the optimum: m1 already has 30 s queued
+    assert makespan([0], jobs, MACHINES, base_time=[30.0, 0.0]) == 40.0
+    assert makespan([1], jobs, MACHINES, base_time=[30.0, 0.0]) == 30.0
+    # resident jobs' reserved HBM shrinks feasibility
+    assert makespan([0], jobs, MACHINES,
+                    reserved_mem=[7 * GIB, 0.0]) == float("inf")
+    assert np.isfinite(makespan([1], jobs, MACHINES,
+                                reserved_mem=[7 * GIB, 0.0]))
+
+
+def test_plans_respect_base_load():
+    jobs = [Job("j", 10.0, GIB)]
+    base = [25.0, 0.0]
+    opt, assign = schedule_optimal(jobs, MACHINES, base_time=base)
+    assert assign == [1] and opt == 25.0  # placing on m1 would be 35 s
+    ga, ga_assign = schedule_ga(jobs, MACHINES, generations=10, seed=0,
+                                base_time=base)
+    assert ga_assign == [1] and ga == 25.0
+    mean, spans = schedule_random(jobs, MACHINES, trials=20, seed=0,
+                                  reserved_mem=[10.5 * GIB, 0.0])
+    assert np.isfinite(mean)  # m1 infeasible at residual HBM: never drawn
+
+
+def test_ga_single_job_no_crossover_crash():
+    # regression: rng.integers(1, 1) raised on single-job waves
+    span, assign = schedule_ga([Job("solo", 3.0, GIB)], MACHINES,
+                               generations=5, seed=0)
+    assert np.isfinite(span) and len(assign) == 1
+
+
+def test_ga_all_infeasible_population_no_crash():
+    # regression: gen-0 entirely infeasible left best_a None -> .copy() crash
+    jobs = [Job(f"j{i}", 5.0, 5 * GIB) for i in range(3)]
+    tiny = [Machine("t1", 2 * GIB), Machine("t2", 2 * GIB)]
+    span, assign = schedule_ga(jobs, tiny, pop_size=4, generations=3, seed=0)
+    assert span == float("inf") and len(assign) == 3

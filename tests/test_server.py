@@ -1,0 +1,328 @@
+"""AbacusServer + AdmissionController: concurrency, coalescing, admission."""
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import Machine
+from repro.serve import (AbacusServer, AdmissionController,
+                         PredictionService, Query, TraceStore)
+from repro.serve.prediction_service import ServiceStats
+
+from test_prediction_service import _abacus, _counting_tracer, _fake_cfg
+
+GIB = 2**30
+
+
+class _CountingAbacus:
+    """Delegates to a fitted DNNAbacus, counting ensemble passes."""
+
+    def __init__(self, ab):
+        self._ab = ab
+        self.predict_calls = 0
+
+    def predict(self, records):
+        self.predict_calls += 1
+        return self._ab.predict(records)
+
+
+def _served(tracer_calls=None, **svc_kw):
+    ab = _CountingAbacus(_abacus())
+    svc = PredictionService(
+        ab, tracer=_counting_tracer(
+            tracer_calls if tracer_calls is not None else []), **svc_kw)
+    return ab, svc
+
+
+# -- lifecycle ---------------------------------------------------------------
+
+
+def test_submit_requires_running_server():
+    _, svc = _served()
+    srv = AbacusServer(svc)
+    with pytest.raises(RuntimeError):
+        srv.submit(_fake_cfg(), 2, 32)
+    srv.start()
+    try:
+        assert srv.running
+        assert np.isfinite(srv.predict_one(_fake_cfg(), 2, 32)["time_s"])
+    finally:
+        srv.stop()
+    assert not srv.running
+    with pytest.raises(RuntimeError):
+        srv.submit(_fake_cfg(), 2, 32)
+
+
+def test_stop_drains_queued_queries():
+    calls = []
+    _, svc = _served(calls)
+    srv = AbacusServer(svc).start()
+    futs = srv.submit_many([(_fake_cfg(), b, 32) for b in (2, 4, 8)])
+    srv.stop()
+    for f in futs:  # drain-then-stop: all answered, none abandoned
+        assert np.isfinite(f.result(1)["time_s"])
+
+
+# -- burst / dedup / coalescing ----------------------------------------------
+
+
+def test_burst_of_identical_queries_costs_one_trace_server_path():
+    calls = []
+    base = _counting_tracer(calls)
+
+    def slow_tracer(cfg, batch, seq):
+        time.sleep(0.05)
+        return base(cfg, batch, seq)
+
+    ab = _CountingAbacus(_abacus())
+    svc = PredictionService(ab, tracer=slow_tracer)
+    cfg = _fake_cfg()
+    with AbacusServer(svc) as srv:
+        futs = [srv.submit(cfg, 2, 32) for _ in range(8)]
+        results = [f.result(10) for f in futs]
+    assert len(calls) == 1  # one trace for the whole burst
+    assert len({r["time_s"] for r in results}) == 1
+    assert srv.stats.completed == 8 and srv.stats.failed == 0
+
+
+def test_burst_costs_one_trace_store_path(tmp_path):
+    calls = []
+    base = _counting_tracer(calls)
+
+    def slow_tracer(cfg, batch, seq):
+        time.sleep(0.05)
+        return base(cfg, batch, seq)
+
+    ab = _CountingAbacus(_abacus())
+    svc = PredictionService(ab, tracer=slow_tracer,
+                            store=TraceStore(str(tmp_path)))
+    with AbacusServer(svc) as srv:
+        futs = [srv.submit(_fake_cfg(), 2, 32) for _ in range(8)]
+        for f in futs:
+            f.result(10)
+    assert len(calls) == 1
+    assert len(svc.store) == 1  # written through exactly once
+
+
+def test_microbatch_coalesces_to_one_ensemble_pass():
+    """Deterministic unit check on the tick path: N queries, 1 pass."""
+    ab, svc = _served()
+    cfg_a, cfg_b = _fake_cfg("a"), _fake_cfg("b")
+    with AbacusServer(svc) as srv:
+        batch = [(Query(c, b, 32), Future())
+                 for c in (cfg_a, cfg_b) for b in (2, 4)] \
+              + [(Query(cfg_a, 2, 32), Future())]  # duplicate key
+        srv._serve_batch(batch)
+    assert ab.predict_calls == 1  # ONE ensemble pass for the micro-batch
+    ests = [fut.result(0) for _, fut in batch]
+    assert all(np.isfinite(e["time_s"]) for e in ests)
+    assert ests[0]["time_s"] == ests[-1]["time_s"]  # duplicate key agrees
+    assert srv.stats.ticks == 1 and srv.stats.max_batch == 5
+
+
+def test_concurrent_submissions_coalesce_fewer_passes_than_queries():
+    calls = []
+    base = _counting_tracer(calls)
+    started = threading.Event()
+
+    def gating_tracer(cfg, batch, seq):
+        started.set()
+        time.sleep(0.1)  # hold tick 1 open while clients pile up
+        return base(cfg, batch, seq)
+
+    ab = _CountingAbacus(_abacus())
+    svc = PredictionService(ab, tracer=gating_tracer)
+    cfg = _fake_cfg()
+    with AbacusServer(svc) as srv:
+        first = srv.submit(cfg, 2, 32)
+        assert started.wait(5)
+        late = srv.submit_many([(cfg, b, s) for b in (2, 4, 8)
+                                for s in (32, 64)])
+        first.result(10)
+        for f in late:
+            f.result(10)
+    # the 6 late queries coalesced into (at most) one tick after the first
+    assert srv.stats.ticks <= 2
+    assert ab.predict_calls <= 2
+    assert srv.stats.max_batch >= 6
+
+
+def test_eviction_under_concurrent_misses_resolves_all_futures():
+    ab, svc = _served(max_cache_entries=2)
+    cfgs = [_fake_cfg(n) for n in "abcdef"]
+    with AbacusServer(svc, trace_workers=4) as srv:
+        futs = [srv.submit(c, b, 32) for c in cfgs for b in (2, 4)]
+        ests = [f.result(10) for f in futs]
+    assert len(ests) == 12 and all(np.isfinite(e["time_s"]) for e in ests)
+    info = svc.cache_info()
+    assert info["entries"] <= 2          # LRU bound held throughout
+    assert svc.stats.evictions >= 10
+    assert srv.stats.failed == 0
+
+
+def test_failing_trace_fails_only_that_query():
+    calls = []
+    base = _counting_tracer(calls)
+
+    def flaky_tracer(cfg, batch, seq):
+        if cfg.name == "bad":
+            raise ValueError("untraceable config")
+        return base(cfg, batch, seq)
+
+    ab = _CountingAbacus(_abacus())
+    svc = PredictionService(ab, tracer=flaky_tracer)
+    with AbacusServer(svc) as srv:
+        good = srv.submit(_fake_cfg("good"), 2, 32)
+        bad = srv.submit(_fake_cfg("bad"), 2, 32)
+        assert np.isfinite(good.result(10)["time_s"])
+        with pytest.raises(ValueError, match="untraceable"):
+            bad.result(10)
+    assert srv.stats.completed == 1 and srv.stats.failed == 1
+
+
+# -- admission controller ----------------------------------------------------
+
+
+class _FixedPredictor:
+    """predict_many stub with controlled estimates (keyed by cfg name)."""
+
+    def __init__(self, table):
+        self.table = table
+
+    def predict_many(self, queries):
+        return [{"model": q.cfg.name, **self.table[q.cfg.name]}
+                for q in queries]
+
+
+def _est(t, mem_gib):
+    return {"time_s": t, "memory_bytes": mem_gib * GIB}
+
+
+def test_admission_places_waves_incrementally():
+    pred = _FixedPredictor({
+        "big": _est(10.0, 20.0),   # only fits m2 (24 GiB)
+        "small": _est(5.0, 4.0),
+    })
+    machines = [Machine("m1", 11 * GIB), Machine("m2", 24 * GIB)]
+    ctl = AdmissionController(pred, machines, plan="optimal")
+    w1 = ctl.admit([Query(_fake_cfg("big"), 2, 32)])
+    assert w1[0].admitted and w1[0].machine == "m2"
+    # wave 2 sees m2's reserved HBM: another big job no longer fits anywhere
+    w2 = ctl.admit([Query(_fake_cfg("big"), 4, 32),
+                    Query(_fake_cfg("small"), 2, 32)])
+    assert not w2[0].admitted and "residual" in w2[0].reason
+    assert w2[1].admitted
+    state = ctl.cluster_state()
+    assert state["resident_jobs"] == 2
+    # completing the resident big job frees m2 for the next wave
+    ctl.complete(w1[0].job_id)
+    w3 = ctl.admit([Query(_fake_cfg("big"), 8, 32)])
+    assert w3[0].admitted and w3[0].machine == "m2"
+
+
+def test_admission_balances_base_time_across_waves():
+    pred = _FixedPredictor({"j": _est(10.0, 1.0)})
+    machines = [Machine("m1", 8 * GIB), Machine("m2", 8 * GIB)]
+    ctl = AdmissionController(pred, machines, plan="optimal")
+    v1 = ctl.admit([Query(_fake_cfg("j"), 2, 32)])
+    v2 = ctl.admit([Query(_fake_cfg("j"), 4, 32)])
+    # second wave must land on the OTHER machine: base_time makes
+    # stacking both 10s jobs on one machine a 20s makespan vs 10s
+    assert {v1[0].machine, v2[0].machine} == {"m1", "m2"}
+    assert ctl.cluster_state()["makespan_s"] == pytest.approx(10.0)
+
+
+def test_admission_complete_unknown_job_raises():
+    ctl = AdmissionController(_FixedPredictor({}), [Machine("m", GIB)])
+    with pytest.raises(KeyError):
+        ctl.complete("nope#0")
+
+
+def test_admission_through_live_server_and_ga():
+    ab, svc = _served()
+    machines = [Machine("m1", 1e21), Machine("m2", 1e21)]
+    with AbacusServer(svc) as srv:
+        ctl = AdmissionController(srv, machines, plan="ga",
+                                  generations=5, seed=0)
+        verdicts = ctl.admit([Query(_fake_cfg(n), b, 32)
+                              for n in ("a", "b") for b in (2, 4)])
+    assert all(v.admitted for v in verdicts)
+    assert {v.machine for v in verdicts} <= {"m1", "m2"}
+    assert len({v.job_id for v in verdicts}) == 4  # unique job ids
+
+
+# -- server introspection ----------------------------------------------------
+
+
+def test_server_info_merges_service_and_server_counters():
+    _, svc = _served()
+    with AbacusServer(svc) as srv:
+        srv.predict_many([(_fake_cfg(), b, 32) for b in (2, 4)])
+        info = srv.server_info()
+    assert info["submitted"] == 2 and info["completed"] == 2
+    assert info["queued"] == 0
+    assert "entries" in info and "store_entries" in info
+    assert info["ensemble_passes"] >= 1
+
+
+def test_service_stats_reset_roundtrip():
+    s = ServiceStats(hits=3, misses=2, evictions=1, store_hits=1, traces=1)
+    assert s.queries == 5
+    s.reset()
+    assert s.as_dict()["queries"] == 0
+
+
+# -- robustness regressions (code review) ------------------------------------
+
+
+def test_unfingerprintable_config_fails_query_not_worker():
+    _, svc = _served()
+    with AbacusServer(svc) as srv:
+        bad = srv.submit(42, 2, 32)  # int: vars() raises TypeError
+        with pytest.raises(TypeError):
+            bad.result(10)
+        # the worker survived the poison query and keeps serving
+        assert np.isfinite(srv.predict_one(_fake_cfg(), 2, 32)["time_s"])
+    assert srv.stats.failed == 1 and srv.stats.completed == 1
+
+
+def test_cancelled_future_is_dropped_not_fatal():
+    calls = []
+    base = _counting_tracer(calls)
+    started, release = threading.Event(), threading.Event()
+
+    def gated_tracer(cfg, batch, seq):
+        started.set()
+        release.wait(5)
+        return base(cfg, batch, seq)
+
+    _, svc = _served()
+    svc._tracer = gated_tracer
+    with AbacusServer(svc) as srv:
+        first = srv.submit(_fake_cfg("a"), 2, 32)
+        assert started.wait(5)              # worker is mid-tick
+        doomed = srv.submit(_fake_cfg("b"), 2, 32)
+        assert doomed.cancel()              # still queued: cancellable
+        release.set()
+        assert np.isfinite(first.result(10)["time_s"])
+        # server keeps serving after skipping the cancelled entry
+        assert np.isfinite(srv.predict_one(_fake_cfg("c"), 2, 32)["time_s"])
+    assert doomed.cancelled()
+
+
+def test_store_write_failure_degrades_to_memory_cache(tmp_path):
+    class _BrokenStore(TraceStore):
+        def put(self, key, rec):
+            raise OSError("disk full")
+
+    calls = []
+    svc = PredictionService(_abacus(), tracer=_counting_tracer(calls),
+                            store=_BrokenStore(str(tmp_path)))
+    est = svc.predict_one(_fake_cfg(), 2, 32)  # trace succeeds, put fails
+    assert np.isfinite(est["time_s"])
+    assert svc.stats.store_errors == 1
+    svc.predict_one(_fake_cfg(), 2, 32)  # memory cache still serves it
+    assert len(calls) == 1 and svc.stats.hits == 1

@@ -1,0 +1,238 @@
+"""TraceStore: persistence, corruption tolerance, cross-process warm start."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.features import ProfileRecord
+from repro.serve.prediction_service import PredictionService
+from repro.serve.trace_store import SCHEMA_VERSION, TraceStore
+
+from test_prediction_service import (_abacus, _counting_tracer, _fake_cfg,
+                                     _random_edges)
+
+
+def _record(name="m0", batch=2, seq=32):
+    rng = np.random.default_rng(batch * 1000 + seq)
+    return ProfileRecord(
+        model_name=name, family="dense", batch_size=batch, input_size=seq,
+        channels=16, learning_rate=1e-3, epoch=1, optimizer="adamw",
+        layers=4, flops=batch * seq * 1e6, params=10_000,
+        nsm_edges=_random_edges(rng, 5), extra={"note": "x"})
+
+
+# -- raw store ---------------------------------------------------------------
+
+
+def test_roundtrip_preserves_record(tmp_path):
+    store = TraceStore(str(tmp_path))
+    key = ("ab" * 8, 2, 32)
+    rec = _record()
+    store.put(key, rec)
+    got = store.get(key)
+    assert got == rec  # dataclass equality covers nsm_edges tuple keys
+    assert got.nsm_edges == rec.nsm_edges
+    assert len(store) == 1 and list(store.keys()) == [key]
+    assert store.stats.writes == 1 and store.stats.hits == 1
+
+
+def test_miss_returns_none_and_counts(tmp_path):
+    store = TraceStore(str(tmp_path))
+    assert store.get(("cd" * 8, 4, 64)) is None
+    assert store.stats.misses == 1 and store.stats.hits == 0
+
+
+def test_put_leaves_no_temp_files(tmp_path):
+    store = TraceStore(str(tmp_path))
+    store.put(("ef" * 8, 2, 32), _record())
+    assert [n for n in os.listdir(tmp_path) if n.endswith(".tmp")] == []
+
+
+def test_corrupted_file_is_skipped_not_fatal(tmp_path):
+    store = TraceStore(str(tmp_path))
+    key = ("11" * 8, 2, 32)
+    store.put(key, _record())
+    with open(store.path_for(key), "w") as f:
+        f.write("{ not json !!")
+    assert store.get(key) is None
+    assert store.stats.corrupt == 1
+    assert list(store.keys()) == []  # inventory skips it too
+    # a fresh put repairs the entry
+    store.put(key, _record())
+    assert store.get(key) is not None
+
+
+def test_foreign_schema_version_is_skipped(tmp_path):
+    store = TraceStore(str(tmp_path))
+    key = ("22" * 8, 2, 32)
+    store.put(key, _record())
+    with open(store.path_for(key)) as f:
+        payload = json.load(f)
+    payload["version"] = SCHEMA_VERSION + 1
+    with open(store.path_for(key), "w") as f:
+        json.dump(payload, f)
+    assert store.get(key) is None
+    assert store.stats.corrupt == 1
+
+
+def test_key_mismatch_is_skipped(tmp_path):
+    store = TraceStore(str(tmp_path))
+    key, other = ("33" * 8, 2, 32), ("44" * 8, 8, 64)
+    store.put(key, _record())
+    os.rename(store.path_for(key), store.path_for(other))
+    assert store.get(other) is None  # file's own key disagrees
+    assert store.stats.corrupt == 1
+
+
+def test_clear_removes_files(tmp_path):
+    store = TraceStore(str(tmp_path))
+    for batch in (2, 4, 8):
+        store.put(("55" * 8, batch, 32), _record(batch=batch))
+    assert store.clear() == 3
+    assert len(store) == 0
+
+
+# -- store-backed PredictionService ------------------------------------------
+
+
+def test_trace_writes_through_and_second_service_warm_starts(tmp_path):
+    ab = _abacus()
+    cfg = _fake_cfg()
+    calls1 = []
+    svc1 = PredictionService(ab, tracer=_counting_tracer(calls1),
+                             store=TraceStore(str(tmp_path)))
+    svc1.predict_one(cfg, 2, 32)
+    assert len(calls1) == 1 and len(svc1.store) == 1
+
+    # "second process": fresh service, fresh memory cache, same directory
+    calls2 = []
+    svc2 = PredictionService(ab, tracer=_counting_tracer(calls2),
+                             store=TraceStore(str(tmp_path)))
+    est = svc2.predict_one(cfg, 2, 32)
+    assert calls2 == []  # ZERO trace calls: answered from the store
+    assert np.isfinite(est["time_s"])
+    info = svc2.cache_info()
+    assert info["store_hits"] == 1 and info["traces"] == 0
+    assert info["entries"] == 1 and info["store_entries"] == 1
+
+
+def test_populated_store_from_real_second_process(tmp_path):
+    """Acceptance: a process boots against a store another PROCESS filled."""
+    code = f"""
+import sys
+sys.path.insert(0, {repr(os.path.join(os.path.dirname(__file__), "..", "src"))})
+sys.path.insert(0, {repr(os.path.dirname(__file__))})
+from repro.serve.prediction_service import PredictionService, config_fingerprint
+from repro.serve.trace_store import TraceStore
+from test_prediction_service import _abacus, _counting_tracer, _fake_cfg
+svc = PredictionService(_abacus(), tracer=_counting_tracer([]),
+                        store=TraceStore({repr(str(tmp_path))}))
+svc.predict_one(_fake_cfg(), 2, 32)
+print(config_fingerprint(_fake_cfg()))
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, check=True)
+    fp_child = out.stdout.strip().splitlines()[-1]
+
+    calls = []
+    svc = PredictionService(_abacus(), tracer=_counting_tracer(calls),
+                            store=TraceStore(str(tmp_path)))
+    # same content-address in both processes...
+    assert svc.cache_key(_fake_cfg(), 2, 32)[0] == fp_child
+    # ...so the previously-seen query is answered with zero trace calls
+    est = svc.predict_one(_fake_cfg(), 2, 32)
+    assert calls == []
+    assert np.isfinite(est["time_s"]) and np.isfinite(est["memory_bytes"])
+
+
+def test_eviction_falls_back_to_store_without_retrace(tmp_path):
+    calls = []
+    svc = PredictionService(_abacus(), max_cache_entries=1,
+                            tracer=_counting_tracer(calls),
+                            store=TraceStore(str(tmp_path)))
+    cfg = _fake_cfg()
+    svc.predict_one(cfg, 2, 32)
+    svc.predict_one(cfg, 4, 32)  # evicts (2, 32) from memory
+    assert svc.stats.evictions == 1
+    svc.predict_one(cfg, 2, 32)  # memory miss -> store hit, NOT a re-trace
+    assert len(calls) == 2
+    assert svc.stats.store_hits == 1
+
+
+def test_corrupted_store_entry_re_traces_via_service(tmp_path):
+    store = TraceStore(str(tmp_path))
+    cfg = _fake_cfg()
+    calls1 = []
+    svc1 = PredictionService(_abacus(), tracer=_counting_tracer(calls1),
+                             store=store)
+    svc1.predict_one(cfg, 2, 32)
+    key = svc1.cache_key(cfg, 2, 32)
+    with open(store.path_for(key), "w") as f:
+        f.write("\x00garbage")
+    calls2 = []
+    svc2 = PredictionService(_abacus(), tracer=_counting_tracer(calls2),
+                             store=TraceStore(str(tmp_path)))
+    est = svc2.predict_one(cfg, 2, 32)  # skipped, re-traced, re-persisted
+    assert len(calls2) == 1 and np.isfinite(est["time_s"])
+    assert svc2.store.stats.corrupt == 1
+    svc3 = PredictionService(_abacus(), tracer=_counting_tracer([]),
+                             store=TraceStore(str(tmp_path)))
+    svc3.predict_one(cfg, 2, 32)
+    assert svc3.stats.store_hits == 1  # repaired on disk
+
+
+# -- clear_cache / cache_info satellites -------------------------------------
+
+
+def test_clear_cache_resets_inflight_and_optionally_stats():
+    import threading
+    import time as _time
+
+    calls = []
+    base = _counting_tracer(calls)
+    release = threading.Event()
+
+    def gated_tracer(cfg, batch, seq):
+        release.wait(5)
+        return base(cfg, batch, seq)
+
+    svc = PredictionService(_abacus(), tracer=gated_tracer)
+    cfg = _fake_cfg()
+    t = threading.Thread(target=svc.predict_one, args=(cfg, 2, 32))
+    t.start()
+    for _ in range(100):  # wait until the trace is registered in-flight
+        with svc._lock:
+            if svc._inflight:
+                break
+        _time.sleep(0.01)
+    svc.clear_cache()  # must wake waiters and forget in-flight state
+    with svc._lock:
+        assert svc._inflight == {}
+    release.set()
+    t.join(5)
+    assert not t.is_alive()
+
+    assert svc.stats.queries > 0
+    svc.clear_cache(reset_stats=True)
+    assert svc.stats.as_dict() == {"hits": 0, "misses": 0, "evictions": 0,
+                                   "store_hits": 0, "traces": 0,
+                                   "store_errors": 0, "queries": 0}
+    assert svc.cache_info()["entries"] == 0
+
+
+def test_cache_info_reports_memory_and_store_distinctly(tmp_path):
+    svc = PredictionService(_abacus(), max_cache_entries=1,
+                            tracer=_counting_tracer([]),
+                            store=TraceStore(str(tmp_path)))
+    cfg = _fake_cfg()
+    for batch in (2, 4, 8):
+        svc.predict_one(cfg, batch, 32)
+    info = svc.cache_info()
+    assert info["entries"] == 1        # LRU-bounded memory tier
+    assert info["store_entries"] == 3  # durable tier keeps everything
+    no_store = PredictionService(_abacus(), tracer=_counting_tracer([]))
+    assert no_store.cache_info()["store_entries"] == 0
