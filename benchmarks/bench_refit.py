@@ -1,0 +1,169 @@
+"""Online refit: closing the feedback loop on a drifted workload.
+
+Simulates the deployment scenario the refit subsystem exists for: a
+predictor fit offline, a fleet whose real costs have drifted (times 3x,
+memory 1.5x — new kernels / contended hosts), and an admission loop
+that reports measured completions back through
+``AdmissionController.report_completion``. Measures:
+
+  * **pre-refit windowed MRE** — generation-0 predictions vs drifted
+    reality (the error an open-loop deployment silently eats),
+  * **refit latency** — ``OnlineRefitter.refit_now`` wall time
+    (feedback join + ensemble refit + generation publish),
+  * **post-refit windowed MRE** — generation-1 predictions vs the same
+    reality, from the server's per-generation calibration window.
+
+Acceptance floor: post-refit time-MRE at least 2x lower than pre-refit
+(the ISSUE acceptance criterion). Results go to ``BENCH_refit.json``.
+
+    PYTHONPATH=src python benchmarks/bench_refit.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.features import ProfileRecord
+from repro.core.scheduler import Machine
+from repro.serve import (AbacusServer, AdmissionController, FeedbackStore,
+                         OnlineRefitter, PredictionService, Query, TraceStore)
+
+try:  # package context (python -m benchmarks.run) or standalone script
+    from benchmarks.bench_server import (_fit_abacus,  # noqa: E402
+                                         _synthetic_records)
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from bench_server import _fit_abacus, _synthetic_records  # noqa: E402
+
+TIME_DRIFT, MEM_DRIFT = 3.0, 1.5
+
+
+class _Cfg:
+    """Duck-typed config: ``dots`` parameterizes the synthetic workload."""
+
+    def __init__(self, name, dots, layers):
+        self.name = name
+        self.family = "dense"
+        self.dots = float(dots)
+        self.num_layers = int(layers)
+
+
+def _tracer(cfg, batch, seq):
+    """Features follow the same generative law as the seed records."""
+    dots = cfg.dots
+    flops = batch * seq * dots * 1e6
+    edges = {("dot", "add"): dots, ("add", "tanh"): dots,
+             ("tanh", "dot"): max(1.0, dots - 1)}
+    return ProfileRecord(
+        model_name=cfg.name, family=cfg.family, batch_size=batch,
+        input_size=seq, channels=64, learning_rate=1e-3, epoch=1,
+        optimizer="adamw", layers=cfg.num_layers, flops=flops,
+        params=int(dots * 1e5), nsm_edges=edges)
+
+
+def _workload(smoke: bool):
+    n_cfgs = 4 if smoke else 10
+    cfgs = [_Cfg(f"net{i}", dots=8 + 6 * i, layers=2 + i)
+            for i in range(n_cfgs)]
+    return [Query(c, b, s) for c in cfgs for b in (2, 4, 8) for s in (32, 64)]
+
+
+def run(smoke: bool = True, out: str = "BENCH_refit.json"):
+    ab = _fit_abacus()
+    queries = _workload(smoke)
+    root = tempfile.mkdtemp(prefix="abacus_refit_")
+    try:
+        rows = _run_inner(ab, queries, root, smoke, out)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def _run_inner(ab, queries, root, smoke, out):
+    svc = PredictionService(ab, tracer=_tracer,
+                            store=TraceStore(os.path.join(root, "traces")))
+    fb = FeedbackStore(os.path.join(root, "fb"))
+    ref = OnlineRefitter(svc, fb, seed_records=_synthetic_records(),
+                         min_observations=len(queries), feedback_repeat=4)
+    with AbacusServer(svc, feedback=fb, refitter=ref) as srv:
+        ctl = AdmissionController(srv, [Machine("m", 1e21)], plan="optimal")
+
+        # wave 1: generation 0 predictions vs drifted reality
+        verdicts = ctl.admit(queries)
+        truth = [(v.time_s * TIME_DRIFT, v.mem_bytes * MEM_DRIFT)
+                 for v in verdicts]
+        t0 = time.perf_counter()
+        for v, (mt, mm) in zip(verdicts, truth):
+            ctl.report_completion(v.job_id, time_s=mt, mem_bytes=mm)
+        report_s = time.perf_counter() - t0
+        pre = srv.calibration.metrics()
+
+        # one refit cycle + hot swap (applied at a tick boundary)
+        t0 = time.perf_counter()
+        gen = ref.refit_now()
+        refit_s = time.perf_counter() - t0
+        assert gen is not None, "refit threshold should have been crossed"
+        deadline = time.time() + 30
+        while svc.generation < gen.number and time.time() < deadline:
+            time.sleep(0.01)
+
+        # wave 2: generation 1 predictions vs the SAME reality
+        verdicts = ctl.admit(queries)
+        for v, (mt, mm) in zip(verdicts, truth):
+            ctl.report_completion(v.job_id, time_s=mt, mem_bytes=mm)
+        by_gen = srv.calibration.metrics()["by_generation"]
+
+    pre_t, pre_m = pre["time_mre"], pre["mem_mre"]
+    post_t = by_gen[gen.number]["time_mre"]
+    post_m = by_gen[gen.number]["mem_mre"]
+    rows = [
+        ("n_queries", float(len(queries))),
+        ("n_feedback", float(gen.n_feedback)),
+        ("n_train_records", float(gen.n_train_records)),
+        ("report_completion_s", report_s),
+        ("refit_latency_s", refit_s),
+        ("pre_time_mre", pre_t),
+        ("post_time_mre", post_t),
+        ("time_mre_improvement", pre_t / max(post_t, 1e-12)),
+        ("pre_mem_mre", pre_m),
+        ("post_mem_mre", post_m),
+        ("mem_mre_improvement", pre_m / max(post_m, 1e-12)),
+    ]
+    if out:
+        payload = {name: val for name, val in rows}
+        payload["smoke"] = smoke
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload (seconds; CI tier-1)")
+    ap.add_argument("--out", default="BENCH_refit.json")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out=args.out)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    vals = dict(rows)
+    if vals["time_mre_improvement"] < 2.0:
+        print(f"# FAIL: post-refit time MRE only "
+              f"{vals['time_mre_improvement']:.2f}x better (floor 2x)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,7 @@ BENCHES = [
     ("scheduling", "benchmarks.bench_scheduling"),      # Fig 14 / §4.3
     ("service", "benchmarks.bench_service"),            # online query engine
     ("server", "benchmarks.bench_server"),              # micro-batched gateway
+    ("refit", "benchmarks.bench_refit"),                # online refit loop
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
 

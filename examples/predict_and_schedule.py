@@ -10,6 +10,10 @@ Online queries then go through the serving subsystem: a persistent
 ``TraceStore`` (so re-running this script warm-starts from prior
 traces), the micro-batched ``AbacusServer`` gateway, and an
 ``AdmissionController`` placing two arrival waves incrementally.
+Finished jobs report measured costs back (``report_completion``); once
+enough feedback accrues the ``OnlineRefitter`` publishes a new model
+generation, the server hot-swaps it between ticks, and the next wave's
+windowed MRE (from ``server.stats()``) drops.
 
     PYTHONPATH=src python examples/predict_and_schedule.py
 """
@@ -28,10 +32,11 @@ from repro.core.predictor import DNNAbacus
 from repro.core.profiler import profile_zoo
 from repro.core.scheduler import (Machine, jobs_from_estimates, schedule_ga,
                                   schedule_jobs)
-from repro.serve import (AbacusServer, AdmissionController,
-                         PredictionService, Query, TraceStore)
+from repro.serve import (AbacusServer, AdmissionController, FeedbackStore,
+                         OnlineRefitter, PredictionService, Query, TraceStore)
 
 GIB = 2**30
+TIME_DRIFT, MEM_DRIFT = 3.0, 1.5  # synthetic fleet drift ("reality")
 
 
 def main():
@@ -80,7 +85,14 @@ def main():
     from repro.configs import get_config, reduced_config
     cfg = reduced_config(get_config("qwen2-0.5b"))
     queries = [Query(cfg, b, 32) for b in (2, 4)]
-    with AbacusServer(service) as server:
+    # demo-specific store: artifacts/feedback_store is the shared path
+    # dryrun --predict accumulates into, and must not be wiped here
+    feedback = FeedbackStore("artifacts/feedback_store_demo")
+    feedback.clear()  # each run demonstrates one fresh feedback cycle
+    refitter = OnlineRefitter(service, feedback, seed_records=records,
+                              min_observations=4, feedback_repeat=8)
+    with refitter, AbacusServer(service, feedback=feedback,
+                                refitter=refitter) as server:
         t0 = time.perf_counter()
         server.predict_many(queries)
         cold = time.perf_counter() - t0
@@ -99,14 +111,60 @@ def main():
         ctl = AdmissionController(server, machines, time_scale=100,
                                   mem_pad=GIB // 2, generations=10, seed=0)
         print("== streaming admission (AdmissionController) ==")
+        truth = {}  # drifted reality per (batch, seq), fixed across waves
         for wave, bs in enumerate(((2, 4), (2, 2, 4))):
-            verdicts = ctl.admit([Query(cfg, b, 32) for b in bs])
-            for v in verdicts:
+            wave_qs = [Query(cfg, b, 32) for b in bs]
+            verdicts = ctl.admit(wave_qs)
+            for v, q in zip(verdicts, wave_qs):
                 where = v.machine if v.admitted else f"REJECTED ({v.reason})"
                 print(f"  wave{wave} {v.job_id}: {where}")
+                if not v.admitted:
+                    continue
+                # the job "runs"; its measured cost is the drifted reality
+                mt, mm = truth.setdefault(
+                    (q.batch, q.seq),
+                    (v.time_s * TIME_DRIFT, v.mem_bytes * MEM_DRIFT))
+                ctl.report_completion(v.job_id, time_s=mt, mem_bytes=mm)
         state = ctl.cluster_state()
         print(f"  cluster makespan {state['makespan_s']:.1f} s, "
-              f"{state['resident_jobs']} resident jobs")
+              f"{state['resident_jobs']} resident jobs "
+              "(all completions reported)")
+
+        # the background refitter saw >= min_observations completions:
+        # wait for the new generation to be published and hot-swapped
+        print("== online refit (feedback -> new generation) ==")
+        pre = server.stats()["calibration"]
+        print(f"  pre-refit window: time_mre={pre['time_mre']:.3f} "
+              f"drift={pre['time_drift']:+.3f}")
+        deadline = time.time() + 60
+        while service.generation == 0 and time.time() < deadline:
+            time.sleep(0.05)
+        if service.generation == 0:
+            print(f"  no generation published within 60 s "
+                  f"(refit state: {refitter.info()})")
+            return
+        gen = refitter.generation
+        print(f"  generation {gen.number} published "
+              f"(fit on {gen.n_train_records} records, "
+              f"{gen.n_feedback} observations, "
+              f"refit {refitter.last_refit_s*1e3:.0f} ms); "
+              f"service now at generation {service.generation}")
+
+        # wave 3 runs under the refit generation against the SAME reality
+        wave3_qs = [Query(cfg, b, 32) for b in (2, 4)]
+        for v, q in zip(ctl.admit(wave3_qs), wave3_qs):
+            if v.admitted:
+                mt, mm = truth[(q.batch, q.seq)]
+                ctl.report_completion(v.job_id, time_s=mt, mem_bytes=mm)
+        by_gen = server.stats()["calibration"]["by_generation"]
+        mre0 = by_gen.get(0, {}).get("time_mre")
+        mre1 = by_gen.get(service.generation, {}).get("time_mre")
+        if mre0 is None or mre1 is None:
+            print(f"  calibration by generation: {by_gen}")
+        else:
+            print(f"  windowed time-MRE: generation 0 = {mre0:.3f} "
+                  f"-> generation {service.generation} = {mre1:.3f} "
+                  f"({mre0 / max(mre1, 1e-12):.1f}x better)")
 
 
 if __name__ == "__main__":

@@ -147,6 +147,11 @@ class RidgeRegressor:
         self.sd = x.std(0) + 1e-9
         xn = np.concatenate([self._norm(x), np.ones((len(x), 1))], axis=1)
         a = xn.T @ xn + self.alpha * np.eye(xn.shape[1])
+        # the intercept must NOT be regularized: shrinking it biases every
+        # prediction by ~exp(-mean(y)*alpha/(n+alpha)) in log-target space,
+        # a large systematic error for small-n (online refit) fits on
+        # big-magnitude targets like log-bytes.
+        a[-1, -1] -= self.alpha
         self.w = np.linalg.solve(a, xn.T @ y)
         return self
 
@@ -213,3 +218,31 @@ MODEL_KINDS = {c.KIND: c for c in
 
 def model_from_dict(d):
     return MODEL_KINDS[d["kind"]].from_dict(d)
+
+
+def clone_unfitted(model):
+    """Fresh unfitted copy with the same hyperparameters.
+
+    The online-refit path reuses the *architectures* the original AutoML
+    search selected (a refit re-estimates parameters on drifted data; it
+    does not need to re-run model selection over the whole pool).
+    """
+    kind = type(model).KIND
+    if kind == "random_forest":
+        m = RandomForestRegressor(n_trees=model.n_trees, extra=model.extra,
+                                  seed=model.seed)
+    elif kind == "extra_trees":
+        m = ExtraTreesRegressor(n_trees=model.n_trees, seed=model.seed)
+    elif kind == "gbdt":
+        m = GradientBoostingRegressor(n_stages=model.n_stages,
+                                      learning_rate=model.lr,
+                                      subsample=model.subsample,
+                                      seed=model.seed)
+    elif kind == "ridge":
+        return RidgeRegressor(alpha=model.alpha)
+    elif kind == "knn":
+        return KNNRegressor(k=model.k)
+    else:
+        raise ValueError(f"unknown model kind {kind!r}")
+    m.cfg = dataclasses.replace(model.cfg)
+    return m

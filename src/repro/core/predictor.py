@@ -58,6 +58,39 @@ class DNNAbacus:
                                     candidates=mk(self.seed + 1))
         return self
 
+    def refit(self, records: Sequence[ProfileRecord], val_frac: float = 0.2,
+              candidate_factory=None) -> "DNNAbacus":
+        """A NEW predictor re-fit on ``records`` (self is untouched).
+
+        The online-refit loop publishes immutable model generations, so
+        refitting must never mutate the ensembles a live server is
+        predicting with mid-tick — hence a fresh ``DNNAbacus``. Without
+        a ``candidate_factory`` the candidate pools are unfitted clones
+        of the models the original AutoML search *selected* (per
+        target), so a refit re-estimates parameters on fresh data
+        without re-running model selection over the whole pool.
+        """
+        new = DNNAbacus(representation=self.representation,
+                        max_vocab=(self.nsm_feat.max_vocab
+                                   if self.nsm_feat is not None else 28),
+                        seed=self.seed)
+        if candidate_factory is not None or self.time_model is None:
+            return new.fit(records, val_frac=val_frac,
+                           candidate_factory=candidate_factory)
+        from repro.core.automl.models import clone_unfitted
+        records = list(records)
+        if new.nsm_feat is not None:
+            new.nsm_feat.fit([r.nsm_edges for r in records])
+        x = new._x(records)
+        t, m = targets(records)
+        new.time_model = fit_automl(
+            x, t, val_frac=val_frac, seed=self.seed,
+            candidates=[clone_unfitted(c) for c in self.time_model.models])
+        new.mem_model = fit_automl(
+            x, m, val_frac=val_frac, seed=self.seed + 1,
+            candidates=[clone_unfitted(c) for c in self.mem_model.models])
+        return new
+
     def predict(self, records: Sequence[ProfileRecord]):
         x = self._x(records)
         return self.time_model.predict(x), self.mem_model.predict(x)

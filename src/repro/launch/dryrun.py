@@ -164,6 +164,22 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             est = service.predict_one(cfg, shp.global_batch, shp.seq_len)
             rec["abacus_time_s"] = round(est["time_s"], 4)
             rec["abacus_memory_gib"] = round(est["memory_bytes"] / 2**30, 3)
+            if "generation" in est:
+                rec["abacus_generation"] = est["generation"]
+            # feed the compile-time ground truth we DO have back into the
+            # refit loop: roofline-bound step time and XLA peak bytes are
+            # measured proxies for the job's realized cost, so a dry-run
+            # sweep doubles as a calibration pass over every train cell.
+            observe = getattr(service, "observe", None)
+            if observe is not None:
+                t_roof = max(roof.t_compute, roof.t_memory,
+                             roof.t_collective)
+                observe(cfg, shp.global_batch, shp.seq_len,
+                        float(t_roof), rec["peak_hbm_gib"] * 2**30,
+                        predicted_time_s=est["time_s"],
+                        predicted_mem_bytes=est["memory_bytes"],
+                        generation=est.get("generation"),
+                        job_id=f"dryrun:{arch}:{shape_name}")
         except Exception as e:
             rec["abacus_error"] = f"{type(e).__name__}: {e}"[:200]
     if verbose:
@@ -198,19 +214,28 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-store", default="artifacts/trace_store",
                     help="persistent trace dir ('' disables): repeated "
                          "dry-runs warm-start instead of re-tracing")
+    ap.add_argument("--feedback-store", default="artifacts/feedback_store",
+                    help="persistent measured-cost observations ('' "
+                         "disables): each predicted train cell's roofline "
+                         "time / peak HBM feed the online-refit loop")
     args = ap.parse_args(argv)
 
     service = server = None
     if args.predict:
         from repro.core.predictor import DNNAbacus
+        from repro.serve.feedback_store import FeedbackStore
         from repro.serve.server import AbacusServer
         from repro.serve.trace_store import TraceStore
         if os.path.exists(args.predictor_path + ".json"):
             store = TraceStore(args.trace_store) if args.trace_store else None
             service = DNNAbacus.load(args.predictor_path).service(store=store)
+            feedback = (FeedbackStore(args.feedback_store)
+                        if args.feedback_store else None)
             # estimates go through the micro-batched gateway, sharing its
-            # trace cache (and store) with any concurrent admission loop
-            server = AbacusServer(service).start()
+            # trace cache (and store) with any concurrent admission loop;
+            # observed cell costs land in the feedback store so a later
+            # refit pass (OnlineRefitter) can consume them.
+            server = AbacusServer(service, feedback=feedback).start()
         else:
             print(f"[dryrun] no fitted predictor at {args.predictor_path}; "
                   "skipping estimates", file=sys.stderr)
@@ -239,6 +264,12 @@ def main(argv=None) -> int:
                             f.write(json.dumps(rec) + "\n")
     finally:
         if server is not None:
+            cal = server.calibration.metrics()
+            if cal["count"]:
+                print(f"[dryrun] calibration over {cal['count']} cells: "
+                      f"time_mre={cal['time_mre']:.3f} "
+                      f"time_drift={cal['time_drift']:+.3f} "
+                      f"mem_mre={cal['mem_mre']:.3f}", file=sys.stderr)
             server.stop()
     return 1 if failures else 0
 

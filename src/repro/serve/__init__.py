@@ -1,16 +1,22 @@
 """Serving layer: prediction gateway + decode engine.
 
 Import-light by design: the admission-gateway stack (``TraceStore``,
-``PredictionService``, ``AbacusServer``, ``AdmissionController``) is
-pure numpy/stdlib and re-exported here; ``repro.serve.engine`` (the
-jax decode engine) is imported lazily by consumers that need it.
+``PredictionService``, ``AbacusServer``, ``AdmissionController``) and
+the online-refit loop (``FeedbackStore``, ``OnlineRefitter``) are pure
+numpy/stdlib and re-exported here; ``repro.serve.engine`` (the jax
+decode engine) is imported lazily by consumers that need it.
 """
 
 from repro.serve.admission import AdmissionController, Verdict
+from repro.serve.feedback_store import (CalibrationWindow, FeedbackStore,
+                                        Observation)
 from repro.serve.prediction_service import (PredictionService, Query,
                                             config_fingerprint)
+from repro.serve.refit import ModelGeneration, OnlineRefitter
 from repro.serve.server import AbacusServer
 from repro.serve.trace_store import TraceStore
 
 __all__ = ["AdmissionController", "Verdict", "PredictionService", "Query",
-           "config_fingerprint", "AbacusServer", "TraceStore"]
+           "config_fingerprint", "AbacusServer", "TraceStore",
+           "FeedbackStore", "Observation", "CalibrationWindow",
+           "OnlineRefitter", "ModelGeneration"]

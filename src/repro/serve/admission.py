@@ -55,9 +55,17 @@ class AdmissionController:
     never double-commit a machine's HBM.
     """
 
+    # plans that return a per-job assignment; "random" returns trial
+    # makespans (a baseline statistic), which admission cannot commit
+    ASSIGNING_PLANS = ("ga", "optimal")
+
     def __init__(self, predictor, machines: Sequence[Machine],
                  plan: str = "ga", time_scale: float = 1.0,
                  mem_pad: float = 0.0, **plan_kw):
+        if plan not in self.ASSIGNING_PLANS:
+            raise ValueError(
+                f"plan {plan!r} does not produce an assignment; "
+                f"choose from {self.ASSIGNING_PLANS}")
         self.predictor = predictor
         self.machines = list(machines)
         self.plan = plan
@@ -66,7 +74,10 @@ class AdmissionController:
         self.plan_kw = dict(plan_kw)
         self._busy = np.zeros(len(self.machines))      # committed time
         self._reserved = np.zeros(len(self.machines))  # committed HBM
-        self._resident: Dict[str, tuple] = {}          # job_id -> (m_idx, Job)
+        # job_id -> (m_idx, Job, Query, estimate): the query/estimate pair
+        # is kept so a completion report can feed the measured outcome —
+        # joined with what we *predicted* — back into the refit loop.
+        self._resident: Dict[str, tuple] = {}
         self._ids = itertools.count()
         self._lock = threading.Lock()
 
@@ -129,7 +140,7 @@ class AdmissionController:
                     m = self.machines[a]
                     self._busy[a] += job.time_s / m.speed
                     self._reserved[a] += job.mem_bytes
-                    self._resident[job.name] = (a, job)
+                    self._resident[job.name] = (a, job, qs[i], ests[i])
                     verdicts[i] = Verdict(
                         job_id=job.name, model=ests[i]["model"],
                         admitted=True, machine=m.name,
@@ -137,14 +148,56 @@ class AdmissionController:
         return verdicts
 
     def complete(self, job_id: str) -> None:
-        """Release a finished job's time/memory reservation."""
+        """Release a finished job's time/memory reservation (no feedback)."""
+        self.report_completion(job_id)
+
+    def report_completion(self, job_id: str,
+                          time_s: Optional[float] = None,
+                          mem_bytes: Optional[float] = None) -> Dict:
+        """Finish a job: free its reservation AND stream its measured cost.
+
+        Releasing the reservation is unconditional — the cluster state
+        must return to baseline once every admitted job completes, with
+        or without measurements. ``time_s``/``mem_bytes`` are measured
+        in the *verdict* domain (what the caller was told to expect:
+        predictor estimate x ``time_scale``, + ``mem_pad``); they are
+        normalized back to the predictor's per-step domain before
+        feeding the loop, so calibration and refit targets stay
+        commensurate with the ensembles' outputs. When the predictor
+        exposes ``observe`` (the ``AbacusServer`` gateway), the
+        observation — joined with the prediction that admitted the job
+        and the generation that made it — feeds the online refit loop.
+        Returns a small completion summary (predicted vs measured, raw
+        domain).
+        """
         with self._lock:
             if job_id not in self._resident:
                 raise KeyError(f"unknown or already-completed job {job_id!r}")
-            k, job = self._resident.pop(job_id)
+            k, job, query, est = self._resident.pop(job_id)
             self._busy[k] = max(0.0, self._busy[k]
                                 - job.time_s / self.machines[k].speed)
             self._reserved[k] = max(0.0, self._reserved[k] - job.mem_bytes)
+        raw_t = None if time_s is None else float(time_s) / self.time_scale
+        raw_m = (None if mem_bytes is None
+                 else max(0.0, float(mem_bytes) - self.mem_pad))
+        summary = {"job_id": job_id, "machine": self.machines[k].name,
+                   "predicted_time_s": est["time_s"],
+                   "predicted_mem_bytes": est["memory_bytes"],
+                   "measured_time_s": raw_t, "measured_mem_bytes": raw_m,
+                   "generation": est.get("generation"), "observed": False}
+        observe = getattr(self.predictor, "observe", None)
+        # non-positive normalized measurements (e.g. measured mem below
+        # mem_pad) carry no calibration signal and would poison the
+        # window (inf MRE) and the refit targets (log(~0)): release the
+        # reservation but do not observe.
+        if (observe is not None and raw_t is not None and raw_m is not None
+                and raw_t > 0.0 and raw_m > 0.0):
+            observe(query.cfg, query.batch, query.seq, raw_t, raw_m,
+                    predicted_time_s=est["time_s"],
+                    predicted_mem_bytes=est["memory_bytes"],
+                    generation=est.get("generation"), job_id=job_id)
+            summary["observed"] = True
+        return summary
 
     # -- introspection ------------------------------------------------------
     def cluster_state(self) -> Dict:
@@ -155,8 +208,8 @@ class AdmissionController:
                      "busy_s": float(self._busy[k]),
                      "reserved_bytes": float(self._reserved[k]),
                      "residual_bytes": float(m.hbm_bytes - self._reserved[k]),
-                     "jobs": sorted(j for j, (a, _) in self._resident.items()
-                                    if a == k)}
+                     "jobs": sorted(j for j, (a, *_) in
+                                    self._resident.items() if a == k)}
                     for k, m in enumerate(self.machines)],
                 "resident_jobs": len(self._resident),
                 "makespan_s": float(self._busy.max()) if len(self._busy)

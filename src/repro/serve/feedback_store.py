@@ -1,0 +1,396 @@
+"""Measured-cost feedback: the observations that close the refit loop.
+
+The serving stack (PR 1-2) predicts every admitted job's (time, memory)
+and then throws the *measured* outcome away, so drift between predicted
+and realized cost silently degrades admission quality. This module
+persists those outcomes and tracks calibration:
+
+  * ``Observation`` — one finished job's measured ``(time_s, mem_bytes)``
+    plus the prediction context (generation, timestamp, job id).
+  * ``FeedbackStore`` — durable ``(config fingerprint, batch, seq) ->
+    {obs_id: Observation}`` map on disk, same atomic temp+``os.replace``
+    / versioned-schema / corrupt-files-are-skipped discipline as
+    ``TraceStore``. Observation ids are content-derived when the caller
+    supplies none, so re-reporting the same completion is idempotent and
+    ``merge`` (union by id) is order-independent — the property multi-
+    host aggregation will rely on.
+  * ``CalibrationWindow`` — rolling predicted-vs-observed window with
+    per-generation MRE and signed drift, surfaced via
+    ``AbacusServer.stats()``.
+
+Cross-process writes to the *same key* are last-writer-wins (one file
+per key, re-read + union under a process-local lock before each write);
+concurrent writers never corrupt a file, they can only drop each
+other's newest observation for that key — one lost data point, never a
+torn record.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import threading
+import time
+from collections import deque
+from typing import Dict, Iterator, List, Optional, Tuple
+
+StoreKey = Tuple[str, int, int]  # (config fingerprint, batch, seq)
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Observation:
+    """One finished job's measured cost (plus prediction context)."""
+    time_s: float
+    mem_bytes: float
+    generation: Optional[int] = None  # generation that predicted this job
+    ts: float = 0.0                   # wall-clock seconds (0 = unknown)
+    job_id: str = ""                  # admission job id ('' = anonymous)
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Observation":
+        return cls(time_s=float(d["time_s"]), mem_bytes=float(d["mem_bytes"]),
+                   generation=(None if d.get("generation") is None
+                               else int(d["generation"])),
+                   ts=float(d.get("ts", 0.0)), job_id=str(d.get("job_id", "")))
+
+
+def observation_id(key: StoreKey, obs: Observation) -> str:
+    """Content-derived id: identical reports dedupe, merges commute.
+
+    For job-identified observations the wall-clock ``ts`` is excluded
+    from the id — a *retried* completion report for the same job (and
+    same measurements) dedupes even though it carries a fresh
+    timestamp. Anonymous observations keep ``ts`` in the id so two
+    genuinely distinct runs with identical measurements stay distinct.
+    """
+    payload = obs.as_dict()
+    if obs.job_id:
+        payload.pop("ts")
+    blob = json.dumps([list(key), payload], sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class FeedbackStats:
+    adds: int = 0        # observations accepted (new ids)
+    duplicates: int = 0  # re-reported ids ignored
+    merged: int = 0      # observations imported by merge()
+    corrupt: int = 0     # files skipped: unparseable / wrong version / bad key
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class FeedbackStore:
+    """Durable measured-cost observations, one JSON file per key."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.stats = FeedbackStats()
+        # reentrant: read-modify-write holds it across _load_payload,
+        # which may itself take it to count a corrupt file
+        self._lock = threading.RLock()
+        # observation count is cached: threshold checks / stats polls run
+        # on every observe() and must not re-scan the whole directory.
+        # Seeded by one startup scan; add/merge/clear keep it current for
+        # THIS process (a concurrent process's writes surface on rescan).
+        self._total: Optional[int] = None
+
+    # -- key/file mapping ---------------------------------------------------
+    @staticmethod
+    def filename(key: StoreKey) -> str:
+        fp, batch, seq = key
+        return f"fb_{fp}_b{int(batch)}_s{int(seq)}.json"
+
+    def path_for(self, key: StoreKey) -> str:
+        return os.path.join(self.root, self.filename(key))
+
+    def _files(self) -> List[str]:
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return []
+        return sorted(n for n in names
+                      if n.startswith("fb_") and n.endswith(".json"))
+
+    def _load_payload(self, path: str) -> Optional[Dict]:
+        """Parsed payload for one key file, or None (corrupt counted)."""
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("version") != SCHEMA_VERSION:
+                raise ValueError(f"schema version {payload.get('version')!r}")
+            fp, batch, seq = payload["key"]
+            payload["key"] = (str(fp), int(batch), int(seq))
+            if not isinstance(payload.get("obs"), dict):
+                raise ValueError("missing observation map")
+            return payload
+        except (OSError, ValueError, KeyError, TypeError):
+            with self._lock:
+                self.stats.corrupt += 1
+                self._total = None  # count is suspect: rescan on next total()
+            return None
+
+    def _write_payload(self, key: StoreKey, obs: Dict[str, Dict]) -> None:
+        from repro.serve.trace_store import atomic_write_json
+
+        payload = {"version": SCHEMA_VERSION,
+                   "key": [key[0], int(key[1]), int(key[2])], "obs": obs}
+        atomic_write_json(self.root, self.path_for(key), payload)
+
+    # -- writes -------------------------------------------------------------
+    def add(self, key: StoreKey, time_s: float, mem_bytes: float,
+            generation: Optional[int] = None, job_id: str = "",
+            ts: Optional[float] = None) -> str:
+        """Record one measured outcome; returns its observation id.
+
+        Re-adding an identical observation (same content-derived id) is
+        a no-op, so completion reports can be retried safely.
+        """
+        obs = Observation(time_s=float(time_s), mem_bytes=float(mem_bytes),
+                          generation=generation,
+                          ts=time.time() if ts is None else float(ts),
+                          job_id=str(job_id))
+        oid = observation_id(key, obs)
+        with self._lock:
+            payload = self._load_payload(self.path_for(key))
+            existing = payload["obs"] if payload is not None else {}
+            if oid in existing:
+                self.stats.duplicates += 1
+                return oid
+            existing[oid] = obs.as_dict()
+            self._write_payload(key, existing)
+            self.stats.adds += 1
+            if self._total is not None:
+                self._total += 1
+        return oid
+
+    def merge(self, other: "FeedbackStore") -> int:
+        """Union another store's observations into this one (by id).
+
+        Union-by-content-id makes the merge commutative and idempotent:
+        ``a.merge(b)`` then ``a.merge(c)`` yields the same contents as
+        any other order — the property multi-host aggregation needs.
+        Returns how many observations were new to this store.
+        """
+        imported = 0
+        for key, obs_map in other.items():
+            with self._lock:
+                payload = self._load_payload(self.path_for(key))
+                existing = payload["obs"] if payload is not None else {}
+                fresh = {oid: o.as_dict() for oid, o in obs_map.items()
+                         if oid not in existing}
+                if not fresh:
+                    continue
+                existing.update(fresh)
+                self._write_payload(key, existing)
+                self.stats.merged += len(fresh)
+                if self._total is not None:
+                    self._total += len(fresh)
+            imported += len(fresh)
+        return imported
+
+    # -- reads --------------------------------------------------------------
+    def get(self, key: StoreKey) -> List[Observation]:
+        """Observations for ``key`` in deterministic (ts, id) order."""
+        payload = self._load_payload(self.path_for(key))
+        if payload is None:
+            return []
+        out = []
+        for oid, d in payload["obs"].items():
+            try:
+                out.append((oid, Observation.from_dict(d)))
+            except (KeyError, TypeError, ValueError):
+                with self._lock:
+                    self.stats.corrupt += 1
+        return [o for _, o in sorted(out, key=lambda e: (e[1].ts, e[0]))]
+
+    def items(self) -> Iterator[Tuple[StoreKey, Dict[str, Observation]]]:
+        """(key, {obs_id: Observation}) for every loadable key file."""
+        for name in self._files():
+            payload = self._load_payload(os.path.join(self.root, name))
+            if payload is None:
+                continue
+            obs = {}
+            for oid, d in payload["obs"].items():
+                try:
+                    obs[oid] = Observation.from_dict(d)
+                except (KeyError, TypeError, ValueError):
+                    with self._lock:
+                        self.stats.corrupt += 1
+            yield payload["key"], obs
+
+    def grouped(self) -> Dict[StoreKey, List[Observation]]:
+        """key -> observations, each list in deterministic (ts, id) order."""
+        return {key: [o for _, o in
+                      sorted(obs.items(), key=lambda e: (e[1].ts, e[0]))]
+                for key, obs in self.items()}
+
+    def keys(self) -> List[StoreKey]:
+        return [key for key, _ in self.items()]
+
+    def snapshot(self) -> Dict[StoreKey, Dict[str, Dict]]:
+        """Canonical content view (for equality checks across stores)."""
+        return {key: {oid: o.as_dict() for oid, o in obs.items()}
+                for key, obs in self.items()}
+
+    def total(self, rescan: bool = False) -> int:
+        """Total observation count across all keys.
+
+        Served from the in-process counter (seeded by one directory
+        scan, maintained by ``add``/``merge``/``clear``) so hot callers
+        — refit threshold checks, ``server.stats()`` polls — cost O(1)
+        instead of re-parsing every file. ``rescan=True`` forces a
+        directory scan (picks up writes from other processes).
+        """
+        with self._lock:
+            if rescan or self._total is None:
+                self._total = sum(len(obs) for _, obs in self.items())
+            return self._total
+
+    def __len__(self) -> int:
+        """Number of keys with at least one loadable observation."""
+        return sum(1 for _ in self.items())
+
+    def oldest_ts(self) -> Optional[float]:
+        """Earliest observation timestamp, or None when empty."""
+        ts = [o.ts for _, obs in self.items() for o in obs.values()]
+        return min(ts) if ts else None
+
+    def clear(self) -> int:
+        n = 0
+        for name in self._files():
+            try:
+                os.unlink(os.path.join(self.root, name))
+                n += 1
+            except OSError:
+                pass
+        with self._lock:
+            self._total = 0
+        return n
+
+    def compact(self, max_age_s: Optional[float] = None,
+                max_per_key: Optional[int] = None) -> Dict[str, int]:
+        """Prune the store: drop stale observations, cap per-key history.
+
+        A long-lived deployment (e.g. every ``dryrun --predict`` sweep
+        appending here) grows without bound otherwise — and refit
+        targets only use each key's newest window anyway. Observations
+        older than ``max_age_s`` are dropped; each key keeps at most its
+        ``max_per_key`` newest (by timestamp); unparseable files and
+        keys left empty are deleted. Returns removal counts.
+        """
+        now = time.time()
+        removed = {"expired": 0, "over_cap": 0, "corrupt_files": 0}
+        for name in self._files():
+            path = os.path.join(self.root, name)
+            with self._lock:
+                payload = self._load_payload(path)
+                if payload is None:
+                    try:
+                        os.unlink(path)
+                        removed["corrupt_files"] += 1
+                    except OSError:
+                        pass
+                    continue
+                obs = payload["obs"]
+                keep = dict(obs)
+                if max_age_s is not None:
+                    fresh = {oid: d for oid, d in keep.items()
+                             if now - float(d.get("ts", 0.0)) <= max_age_s}
+                    removed["expired"] += len(keep) - len(fresh)
+                    keep = fresh
+                if max_per_key is not None and len(keep) > max_per_key:
+                    newest = sorted(keep.items(),
+                                    key=lambda e: (float(e[1].get("ts", 0.0)),
+                                                   e[0]))[-max_per_key:]
+                    removed["over_cap"] += len(keep) - len(newest)
+                    keep = dict(newest)
+                if len(keep) == len(obs):
+                    continue
+                if keep:
+                    self._write_payload(payload["key"], keep)
+                else:
+                    try:
+                        os.unlink(path)
+                    except OSError:
+                        pass
+                self._total = None  # recount lazily
+        return {**removed,
+                "removed": removed["expired"] + removed["over_cap"],
+                "kept": self.total(rescan=True)}
+
+    def info(self) -> Dict[str, int]:
+        return {"feedback_keys": len(self._files()),
+                "feedback_total": self.total(), **self.stats.as_dict()}
+
+
+class CalibrationWindow:
+    """Rolling predicted-vs-observed calibration (windowed MRE + drift).
+
+    ``observe`` records one completed job; ``metrics`` reports, over the
+    last ``window`` completions: MRE for time and memory (the paper's
+    metric, now measured online), signed relative drift
+    (mean((pred - obs) / obs); negative = the predictor underestimates),
+    and the same per prediction generation — the split that shows a
+    refit actually helped (old-generation MRE vs new-generation MRE).
+    """
+
+    def __init__(self, window: int = 256):
+        self.window = int(window)
+        self._obs: deque = deque(maxlen=self.window)
+        self._lock = threading.Lock()
+
+    def observe(self, pred_time_s: float, obs_time_s: float,
+                pred_mem_bytes: float, obs_mem_bytes: float,
+                generation: Optional[int] = None) -> None:
+        with self._lock:
+            self._obs.append((float(pred_time_s), float(obs_time_s),
+                              float(pred_mem_bytes), float(obs_mem_bytes),
+                              generation))
+
+    @staticmethod
+    def _agg(rows) -> Dict[str, float]:
+        def rel(pred, obs):
+            return (pred - obs) / obs if obs else math.inf
+        t_rel = [rel(pt, ot) for pt, ot, _, _, _ in rows]
+        m_rel = [rel(pm, om) for _, _, pm, om, _ in rows]
+        n = len(rows)
+        return {"count": n,
+                "time_mre": sum(abs(r) for r in t_rel) / n,
+                "mem_mre": sum(abs(r) for r in m_rel) / n,
+                "time_drift": sum(t_rel) / n,
+                "mem_drift": sum(m_rel) / n}
+
+    def metrics(self) -> Dict:
+        with self._lock:
+            rows = list(self._obs)
+        if not rows:
+            return {"count": 0, "time_mre": None, "mem_mre": None,
+                    "time_drift": None, "mem_drift": None,
+                    "by_generation": {}}
+        by_gen: Dict[Optional[int], list] = {}
+        for row in rows:
+            by_gen.setdefault(row[4], []).append(row)
+        out = self._agg(rows)
+        out["by_generation"] = {gen: self._agg(grp)
+                                for gen, grp in sorted(
+                                    by_gen.items(),
+                                    key=lambda e: (-1 if e[0] is None
+                                                   else e[0]))}
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._obs.clear()

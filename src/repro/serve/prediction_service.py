@@ -31,7 +31,7 @@ import hashlib
 import json
 import threading
 from collections import OrderedDict
-from typing import Any, Callable, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.features import ProfileRecord
 from repro.core.predictor import HBM_PER_DEVICE
@@ -151,6 +151,8 @@ class ServiceStats:
     store_hits: int = 0     # misses answered by the persistent TraceStore
     traces: int = 0         # misses that actually ran the tracer
     store_errors: int = 0   # failed write-throughs (served memory-only)
+    est_hits: int = 0       # queries served from the prediction cache
+    adopts: int = 0         # generations adopted (prediction cache cleared)
 
     @property
     def queries(self) -> int:
@@ -160,11 +162,13 @@ class ServiceStats:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "store_hits": self.store_hits,
                 "traces": self.traces, "store_errors": self.store_errors,
+                "est_hits": self.est_hits, "adopts": self.adopts,
                 "queries": self.queries}
 
     def reset(self) -> None:
         self.hits = self.misses = self.evictions = 0
         self.store_hits = self.traces = self.store_errors = 0
+        self.est_hits = self.adopts = 0
 
 
 class PredictionService:
@@ -173,16 +177,25 @@ class PredictionService:
     def __init__(self, abacus, max_cache_entries: int = 1024,
                  hbm_budget: float = HBM_PER_DEVICE,
                  tracer: Callable[..., ProfileRecord] = trace_query,
-                 store=None):
+                 store=None, cache_predictions: bool = True):
         self.abacus = abacus
         self.hbm_budget = float(hbm_budget)
         self.max_cache_entries = max_cache_entries
+        self.cache_predictions = bool(cache_predictions)
         self._tracer = tracer  # injectable: tests count trace calls
         self.store = store  # optional TraceStore: cross-process persistence
         self._cache: "OrderedDict[CacheKey, ProfileRecord]" = OrderedDict()
         self._inflight: Dict[CacheKey, threading.Event] = {}
         self._lock = threading.Lock()
         self.stats = ServiceStats()
+        # model generation (bumped by adopt()) + per-generation prediction
+        # cache: (key -> (time, mem)) valid only for the generation that
+        # computed it — invalidated wholesale on every swap, while the
+        # trace cache and persistent store survive (traces are
+        # generation-independent raw features).
+        self.generation = 0
+        self._est_cache: "OrderedDict[CacheKey, Tuple[float, float]]" = \
+            OrderedDict()
 
     # -- trace cache --------------------------------------------------------
     def cache_key(self, cfg, batch: int, seq: int) -> CacheKey:
@@ -199,7 +212,14 @@ class PredictionService:
         store (a prior process may have traced this key) and only then
         runs the tracer; fresh traces are written through to the store.
         """
-        key = self.cache_key(cfg, batch, seq)
+        return self._record_for_key(self.cache_key(cfg, batch, seq),
+                                    cfg, batch, seq)
+
+    def _record_for_key(self, key: CacheKey, cfg, batch: int,
+                        seq: int) -> ProfileRecord:
+        """``record_for`` with a precomputed key (the fingerprint is the
+        hot path's dominant per-query cost; batched callers compute it
+        once and reuse it for record, prediction cache, and store)."""
         while True:
             with self._lock:
                 rec = self._cache.get(key)
@@ -242,12 +262,24 @@ class PredictionService:
             ev.set()
         return rec
 
+    def cached_record(self, key: CacheKey) -> Optional[ProfileRecord]:
+        """Already-traced record for ``key`` from memory only (no trace).
+
+        The refit path uses this to join feedback observations with
+        their feature templates without paying a trace for keys the
+        service has never seen.
+        """
+        with self._lock:
+            return self._cache.get(key)
+
     def cache_info(self) -> Dict[str, int]:
         """Counters, with in-memory entries distinct from store entries."""
         store_entries = len(self.store) if self.store is not None else 0
         with self._lock:
             return {"entries": len(self._cache),
+                    "est_entries": len(self._est_cache),
                     "store_entries": store_entries,
+                    "generation": self.generation,
                     **self.stats.as_dict()}
 
     def clear_cache(self, reset_stats: bool = False) -> None:
@@ -261,17 +293,58 @@ class PredictionService:
         """
         with self._lock:
             self._cache.clear()
+            self._est_cache.clear()
             inflight, self._inflight = self._inflight, {}
             if reset_stats:
                 self.stats.reset()
         for ev in inflight.values():
             ev.set()
 
+    # -- model generations --------------------------------------------------
+    def adopt(self, abacus, generation: Optional[int] = None) -> bool:
+        """Hot-swap the predictor to a new model generation.
+
+        Atomically replaces the ensembles and invalidates the
+        per-generation prediction cache; the trace cache and persistent
+        store are untouched (raw features outlive every generation).
+        ``generation`` defaults to the next number; a stale publish
+        (``generation`` <= the current one) is refused and returns
+        False, so out-of-order deliveries cannot roll the predictor
+        back — generations are monotone.
+        """
+        with self._lock:
+            if generation is None:
+                generation = self.generation + 1
+            elif int(generation) <= self.generation:
+                return False
+            self.abacus = abacus
+            self.generation = int(generation)
+            self._est_cache.clear()
+            self.stats.adopts += 1
+        return True
+
+    def publish_generation(self, gen) -> bool:
+        """Sink API for ``OnlineRefitter``: adopt a ``ModelGeneration``."""
+        return self.adopt(gen.abacus, gen.number)
+
+    def snapshot(self):
+        """Consistent (abacus, generation) pair for one batch of work.
+
+        Callers that predict a whole micro-batch (``AbacusServer``) use
+        the snapshot so a concurrent ``adopt`` cannot mix generations
+        within the batch.
+        """
+        with self._lock:
+            return self.abacus, self.generation
+
     # -- queries ------------------------------------------------------------
-    def _estimate(self, rec: ProfileRecord, t: float, m: float) -> Dict:
+    def _estimate(self, rec: ProfileRecord, t: float, m: float,
+                  generation: Optional[int] = None) -> Dict:
         return {"model": rec.model_name, "time_s": float(t),
                 "memory_bytes": float(m), "hbm_budget": self.hbm_budget,
-                "admitted": float(m) <= self.hbm_budget}
+                "admitted": float(m) <= self.hbm_budget,
+                "generation": (self.generation if generation is None
+                               else int(generation))}
 
     def predict_one(self, cfg, batch: int, seq: int) -> Dict:
         """Admission-control estimate for a (ModelConfig, batch, seq) job."""
@@ -280,19 +353,72 @@ class PredictionService:
     def predict_many(self, queries: Sequence) -> List[Dict]:
         """Batched queries: one design matrix, one ensemble pass per target.
 
-        ``queries`` holds ``Query`` objects or ``(cfg, batch, seq)`` tuples.
+        ``queries`` holds ``Query`` objects or ``(cfg, batch, seq)``
+        tuples. Predictions are memoized per key in a per-generation
+        cache (cleared by ``adopt``): a repeat query under the same
+        generation skips the ensemble pass entirely.
         """
         qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
         if not qs:
             return []
-        recs = [self.record_for(q.cfg, q.batch, q.seq) for q in qs]
-        t_pred, m_pred = self.abacus.predict(recs)
-        return [self._estimate(r, t, m)
-                for r, t, m in zip(recs, t_pred, m_pred)]
+        keys = [self.cache_key(q.cfg, q.batch, q.seq) for q in qs]
+        recs = [self._record_for_key(k, q.cfg, q.batch, q.seq)
+                for k, q in zip(keys, qs)]
+        abacus, gen = self.snapshot()
+        preds, _ = self.predict_keys(keys, recs, abacus=abacus,
+                                     generation=gen)
+        return [self._estimate(r, *preds[k], generation=gen)
+                for r, k in zip(recs, keys)]
 
-    def predict_records(self, records: Sequence[ProfileRecord]):
-        """Batched (time, memory) prediction for already-traced records."""
-        return self.abacus.predict(list(records))
+    def predict_keys(self, keys: Sequence[CacheKey],
+                     records: Sequence[ProfileRecord], abacus=None,
+                     generation: Optional[int] = None):
+        """Keyed batched prediction with per-generation memoization.
+
+        Returns ``({key: (time, mem)}, ran_ensemble)``. Keys already in
+        the prediction cache (same generation) skip the ensemble; the
+        rest run in ONE batched pass and are memoized — unless the
+        snapshot generation no longer matches (a concurrent ``adopt``),
+        in which case results are returned but never poison the newer
+        generation's cache. Duplicate keys cost one prediction.
+        """
+        if abacus is None or generation is None:
+            abacus, generation = self.snapshot()
+        use_cache = self.cache_predictions
+        cached: Dict[CacheKey, Tuple[float, float]] = {}
+        with self._lock:
+            if use_cache and generation == self.generation:
+                for k in keys:
+                    hit = self._est_cache.get(k)
+                    if hit is not None:
+                        self._est_cache.move_to_end(k)  # LRU, not FIFO
+                        cached[k] = hit
+            self.stats.est_hits += sum(1 for k in keys if k in cached)
+        cold = [k for k in dict.fromkeys(keys) if k not in cached]
+        rec_of = dict(zip(keys, records))
+        preds: Dict[CacheKey, Tuple[float, float]] = dict(cached)
+        if cold:
+            t_pred, m_pred = abacus.predict([rec_of[k] for k in cold])
+            for k, t, m in zip(cold, t_pred, m_pred):
+                preds[k] = (float(t), float(m))
+            with self._lock:
+                if use_cache and generation == self.generation:
+                    for k in cold:
+                        self._est_cache[k] = preds[k]
+                        self._est_cache.move_to_end(k)
+                    while len(self._est_cache) > self.max_cache_entries:
+                        self._est_cache.popitem(last=False)
+        return preds, bool(cold)
+
+    def predict_records(self, records: Sequence[ProfileRecord],
+                        abacus=None):
+        """Batched (time, memory) prediction for already-traced records.
+
+        ``abacus`` pins the ensembles for the whole batch (pass a
+        ``snapshot()`` result to keep a micro-batch on one generation
+        even if ``adopt`` lands mid-flight).
+        """
+        return (abacus or self.abacus).predict(list(records))
 
     # -- scheduling bridge (paper §4.3) -------------------------------------
     def jobs(self, queries: Sequence, time_scale: float = 1.0,

@@ -30,6 +30,7 @@ from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.serve.feedback_store import CalibrationWindow
 from repro.serve.prediction_service import PredictionService, Query
 
 
@@ -42,6 +43,8 @@ class ServerStats:
     ensemble_passes: int = 0   # abacus.predict calls (== ticks served)
     max_batch: int = 0         # largest micro-batch coalesced
     cold_traces: int = 0       # unique keys traced on the pool
+    gen_swaps: int = 0         # generations hot-swapped between ticks
+    observations: int = 0      # measured completions reported via observe()
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -49,6 +52,18 @@ class ServerStats:
     @property
     def mean_batch(self) -> float:
         return self.completed / self.ticks if self.ticks else 0.0
+
+    def __call__(self) -> Dict:
+        """``server.stats()``: the full stats dict, counters included.
+
+        The server stamps ``_full_stats`` onto its own ``ServerStats``
+        instance so the counters stay attribute-addressable
+        (``server.stats.ticks``) while ``server.stats()`` reports the
+        whole picture — counters plus generation, rolling calibration,
+        and refit state.
+        """
+        fn = getattr(self, "_full_stats", None)
+        return fn() if fn is not None else self.as_dict()
 
 
 class AbacusServer:
@@ -61,13 +76,24 @@ class AbacusServer:
     """
 
     def __init__(self, service: PredictionService, max_batch: int = 256,
-                 trace_workers: int = 4):
+                 trace_workers: int = 4, feedback=None, refitter=None,
+                 calibration_window: int = 256):
         self.service = service
         self.max_batch = int(max_batch)
         self.trace_workers = int(trace_workers)
         self.stats = ServerStats()
+        self.stats._full_stats = self._stats_dict  # server.stats() works too
+        # feedback loop (optional): measured completions land in the
+        # FeedbackStore, calibration tracks predicted-vs-observed, and
+        # the refitter publishes new generations back through us.
+        self.feedback = feedback      # FeedbackStore or None
+        self.calibration = CalibrationWindow(window=calibration_window)
+        self.refitter = refitter      # OnlineRefitter or None
+        if refitter is not None:
+            refitter.add_sink(self)
         self._queue: Deque[Tuple[Query, Future]] = deque()
         self._cond = threading.Condition()
+        self._pending_gen = None      # generation awaiting a tick boundary
         self._worker: Optional[threading.Thread] = None
         self._pool: Optional[ThreadPoolExecutor] = None
         self._running = False
@@ -107,6 +133,9 @@ class AbacusServer:
             if worker.is_alive():  # still draining: do not yank the pool
                 return
             self._worker = None
+        # a publish that raced the worker's exit may still sit queued
+        with self._cond:
+            self._apply_pending_locked()
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
@@ -165,13 +194,75 @@ class AbacusServer:
                      timeout: Optional[float] = None) -> List[Dict]:
         return [f.result(timeout) for f in self.submit_many(queries)]
 
+    # -- model generations --------------------------------------------------
+    def publish_generation(self, gen) -> bool:
+        """Queue a ``ModelGeneration`` for adoption at a tick boundary.
+
+        The swap is applied by the worker thread *between* micro-batch
+        ticks, so an in-flight micro-batch always finishes on the
+        generation it started with — a hot swap can never mix
+        generations within one tick. With no live worker (bare server)
+        nothing is in flight and the service adopts immediately.
+        """
+        with self._cond:
+            # queue only while the worker is RUNNING: during shutdown the
+            # worker may already be past its final pending check, so a
+            # queued generation could be stranded — adopt directly
+            # instead (safe: an in-flight tick predicts from its own
+            # snapshot, so a mid-drain adopt still can't mix a tick).
+            if (self._running and self._worker is not None
+                    and self._worker.is_alive()):
+                if (self._pending_gen is None
+                        or gen.number > self._pending_gen.number):
+                    self._pending_gen = gen
+                self._cond.notify_all()
+                return True
+        return self.service.adopt(gen.abacus, gen.number)
+
+    def _apply_pending_locked(self) -> None:
+        """Adopt a queued generation; callers hold ``self._cond``."""
+        gen, self._pending_gen = self._pending_gen, None
+        if gen is not None and self.service.adopt(gen.abacus, gen.number):
+            self.stats.gen_swaps += 1
+
+    # -- feedback loop ------------------------------------------------------
+    def observe(self, cfg, batch: int, seq: int, time_s: float,
+                mem_bytes: float, *, predicted_time_s: Optional[float] = None,
+                predicted_mem_bytes: Optional[float] = None,
+                generation: Optional[int] = None, job_id: str = "") -> None:
+        """Report one finished job's measured cost.
+
+        Feeds the rolling calibration window (when the prediction that
+        admitted the job is supplied), persists the observation in the
+        ``FeedbackStore`` (when attached), and wakes the refitter.
+        Non-positive measurements are dropped at this shared entry
+        point: they carry no calibration signal and would poison the
+        window (inf MRE) and the refit targets (log of ~0).
+        """
+        if float(time_s) <= 0.0 or float(mem_bytes) <= 0.0:
+            return
+        self.stats.observations += 1
+        if predicted_time_s is not None and predicted_mem_bytes is not None:
+            self.calibration.observe(predicted_time_s, time_s,
+                                     predicted_mem_bytes, mem_bytes,
+                                     generation)
+        if self.feedback is not None:
+            key = self.service.cache_key(cfg, batch, seq)
+            self.feedback.add(key, time_s, mem_bytes,
+                              generation=generation, job_id=job_id)
+        if self.refitter is not None:
+            self.refitter.notify()
+
     # -- worker loop --------------------------------------------------------
     def _loop(self) -> None:
         while True:
             with self._cond:
+                self._apply_pending_locked()
                 while self._running and not self._queue:
                     self._cond.wait()
+                    self._apply_pending_locked()
                 if not self._queue:  # stopped and drained
+                    self._apply_pending_locked()
                     return
                 batch = [self._queue.popleft()
                          for _ in range(min(len(self._queue), self.max_batch))]
@@ -195,12 +286,18 @@ class AbacusServer:
                             pass
             with self._cond:
                 if not self._running and not self._queue:
+                    self._apply_pending_locked()  # don't strand a publish
                     return
 
     def _serve_batch(self, batch: List[Tuple[Query, Future]]) -> None:
         svc = self.service
         self.stats.ticks += 1
+        tick = self.stats.ticks
         self.stats.max_batch = max(self.stats.max_batch, len(batch))
+        # one (abacus, generation) snapshot covers the whole tick: even a
+        # direct service.adopt racing this batch cannot mix generations
+        # within it (verdicts are tagged with the snapshot generation).
+        abacus, generation = svc.snapshot()
         # 1) resolve records: unique keys, cold misses traced concurrently.
         #    record_for's in-flight dedup makes duplicate keys (within the
         #    batch or racing with direct service callers) cost one trace.
@@ -217,9 +314,9 @@ class AbacusServer:
                 key_of.append(key)
                 continue
             key_of.append(key)
-            if key not in by_key:
+            if key not in by_key:  # reuse the computed key: one fingerprint
                 by_key[key] = self._pool.submit(
-                    svc.record_for, q.cfg, q.batch, q.seq)
+                    svc._record_for_key, key, q.cfg, q.batch, q.seq)
         for key, f in by_key.items():
             try:
                 rec_of[key] = f.result()
@@ -231,9 +328,13 @@ class AbacusServer:
         preds = {}
         if uniq:
             try:
-                t_pred, m_pred = svc.predict_records([rec_of[k] for k in uniq])
-                self.stats.ensemble_passes += 1
-                preds = {k: (t, m) for k, t, m in zip(uniq, t_pred, m_pred)}
+                # at most ONE ensemble pass per tick — and zero when the
+                # whole micro-batch hits the per-generation prediction
+                # cache (repeat queries under an unchanged generation).
+                preds, ran_ensemble = svc.predict_keys(
+                    uniq, [rec_of[k] for k in uniq],
+                    abacus=abacus, generation=generation)
+                self.stats.ensemble_passes += int(ran_ensemble)
             except Exception as e:
                 err_of.update({k: e for k in uniq})
         # 3) resolve futures with per-query admission verdicts.
@@ -241,7 +342,9 @@ class AbacusServer:
             if key in preds:
                 t, m = preds[key]
                 self.stats.completed += 1
-                fut.set_result(svc._estimate(rec_of[key], t, m))
+                est = svc._estimate(rec_of[key], t, m, generation=generation)
+                est["tick"] = tick
+                fut.set_result(est)
             else:
                 self.stats.failed += 1
                 fut.set_exception(err_of.get(
@@ -254,3 +357,18 @@ class AbacusServer:
         return {"running": self._running, "queued": queued,
                 "mean_batch": round(self.stats.mean_batch, 2),
                 **self.stats.as_dict(), **self.service.cache_info()}
+
+    def _stats_dict(self) -> Dict:
+        """Everything ``server.stats()`` reports: counters + calibration.
+
+        ``calibration`` carries the rolling windowed MRE / drift for
+        time and memory, overall and split by the generation that made
+        each prediction — the numbers that show a refit paying off.
+        """
+        d = self.server_info()
+        d["calibration"] = self.calibration.metrics()
+        if self.refitter is not None:
+            d["refit"] = self.refitter.info()
+        if self.feedback is not None:
+            d["feedback"] = self.feedback.info()
+        return d

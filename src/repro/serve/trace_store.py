@@ -24,6 +24,7 @@ import json
 import os
 import tempfile
 import threading
+import time
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core.features import ProfileRecord, record_from_json, record_to_json
@@ -31,6 +32,22 @@ from repro.core.features import ProfileRecord, record_from_json, record_to_json
 StoreKey = Tuple[str, int, int]  # (config fingerprint, batch, seq)
 
 SCHEMA_VERSION = 1
+
+
+def atomic_write_json(root: str, path: str, payload: Dict) -> None:
+    """Same-directory temp file + ``os.replace``: concurrent readers see
+    the old file or the new one, never a torn record. Shared by every
+    durable store in ``repro.serve`` (traces, feedback) so the write
+    discipline is fixed in exactly one place."""
+    fd, tmp = tempfile.mkstemp(dir=root, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)  # atomic on POSIX
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 @dataclasses.dataclass
@@ -101,15 +118,7 @@ class TraceStore:
         payload = {"version": SCHEMA_VERSION,
                    "key": [key[0], int(key[1]), int(key[2])],
                    "record": record_to_json(rec)}
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f)
-            os.replace(tmp, path)  # atomic on POSIX: readers see old or new
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        atomic_write_json(self.root, path, payload)
         with self._lock:
             self.stats.writes += 1
         return path
@@ -147,6 +156,59 @@ class TraceStore:
             except OSError:
                 pass
         return n
+
+    def compact(self, max_age_s: Optional[float] = None,
+                max_entries: Optional[int] = None) -> Dict[str, int]:
+        """Garbage-collect the store: stale schemas, TTL, entry cap.
+
+        Drops (1) files carrying a foreign schema generation or that no
+        longer parse — they can never be served, only re-skipped on
+        every ``get`` — (2) files older than ``max_age_s`` (by mtime;
+        the TTL), and (3) the oldest files beyond ``max_entries``
+        (newest survive). Deletion is plain ``unlink``: a concurrent
+        reader either opened the file first (and reads the old record)
+        or misses and re-traces — never a torn read. Returns removal
+        counts by reason plus the surviving entry count.
+        """
+        now = time.time()
+        valid: List[tuple] = []  # (mtime, name) of loadable current-schema
+        removed = {"stale_schema": 0, "expired": 0, "over_cap": 0}
+
+        def _unlink(name: str, reason: str) -> None:
+            try:
+                os.unlink(os.path.join(self.root, name))
+                removed[reason] += 1
+            except OSError:
+                pass  # a concurrent compact/clear got there first
+
+        for name in self._files():
+            path = os.path.join(self.root, name)
+            try:
+                mtime = os.path.getmtime(path)
+                with open(path) as f:
+                    payload = json.load(f)
+                if payload.get("version") != SCHEMA_VERSION:
+                    raise ValueError("foreign schema")
+                self._key_from_payload(payload)
+                record_from_json(payload["record"])  # must be servable:
+                # a parseable file whose record cannot load would be
+                # re-skipped by every get() forever — exactly what
+                # compaction exists to drop
+            except (OSError, ValueError, KeyError, TypeError):
+                _unlink(name, "stale_schema")
+                continue
+            if max_age_s is not None and now - mtime > max_age_s:
+                _unlink(name, "expired")
+                continue
+            valid.append((mtime, name))
+        if max_entries is not None and len(valid) > max_entries:
+            valid.sort()  # oldest first
+            doomed, valid = valid[:len(valid) - max_entries], \
+                valid[len(valid) - max_entries:]
+            for _, name in doomed:
+                _unlink(name, "over_cap")
+        return {**removed, "removed": sum(removed.values()),
+                "kept": len(valid)}
 
     def info(self) -> Dict[str, int]:
         return {"store_entries": len(self), **self.stats.as_dict()}

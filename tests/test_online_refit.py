@@ -1,0 +1,621 @@
+"""Online refit loop: FeedbackStore, OnlineRefitter, generation hot-swap.
+
+Tier-1: store round-trip/corruption tolerance, refit thresholds,
+generation monotonicity, prediction-cache invalidation on swap, the
+end-to-end MRE-improves-after-refit demo on synthetic drift, and the
+reservation-release regression. Tier-2 (``slow``): a live ``AbacusServer``
+driven through feedback -> refit -> hot-swap under concurrent submits
+with the real tracer.
+"""
+
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.core.scheduler import Machine
+from repro.serve import (AbacusServer, AdmissionController, FeedbackStore,
+                         ModelGeneration, OnlineRefitter,
+                         PredictionService, Query, TraceStore)
+from repro.serve.feedback_store import CalibrationWindow, observation_id
+
+from test_prediction_service import _abacus, _counting_tracer, _fake_cfg
+from test_server import _CountingAbacus
+
+GIB = 2**30
+KEY = ("ab" * 8, 2, 32)
+
+
+# -- FeedbackStore ------------------------------------------------------------
+
+
+def test_feedback_roundtrip_and_persistence(tmp_path):
+    fb = FeedbackStore(str(tmp_path))
+    oid = fb.add(KEY, 0.5, 2e9, generation=0, job_id="j#0", ts=10.0)
+    fb.add(KEY, 0.7, 3e9, generation=1, job_id="j#1", ts=20.0)
+    obs = fb.get(KEY)
+    assert [o.time_s for o in obs] == [0.5, 0.7]  # (ts, id) order
+    assert obs[0].generation == 0 and obs[0].job_id == "j#0"
+    assert fb.total() == 2 and len(fb) == 1
+    # a fresh instance over the same directory sees everything
+    again = FeedbackStore(str(tmp_path))
+    assert again.total() == 2
+    assert again.get(KEY)[0].mem_bytes == 2e9
+    assert observation_id(KEY, obs[0]) == oid
+
+
+def test_feedback_duplicate_report_is_idempotent(tmp_path):
+    fb = FeedbackStore(str(tmp_path))
+    a = fb.add(KEY, 0.5, 2e9, job_id="j#0", ts=10.0)
+    b = fb.add(KEY, 0.5, 2e9, job_id="j#0", ts=10.0)  # retried report
+    assert a == b and fb.total() == 1
+    assert fb.stats.adds == 1 and fb.stats.duplicates == 1
+    # a RETRY carries a fresh wall clock: job identity still dedupes it
+    c = fb.add(KEY, 0.5, 2e9, job_id="j#0", ts=99.0)
+    assert c == a and fb.total() == 1
+    # anonymous observations with identical measurements stay distinct
+    fb.add(KEY, 0.5, 2e9, ts=10.0)
+    fb.add(KEY, 0.5, 2e9, ts=11.0)
+    assert fb.total() == 3
+
+
+def test_feedback_corrupted_file_skipped_and_repaired(tmp_path):
+    fb = FeedbackStore(str(tmp_path))
+    fb.add(KEY, 0.5, 2e9, ts=1.0)
+    with open(fb.path_for(KEY), "w") as f:
+        f.write("{ not json !!")
+    assert fb.get(KEY) == []          # skipped, not fatal
+    assert fb.total() == 0
+    assert fb.stats.corrupt >= 1
+    fb.add(KEY, 0.6, 2e9, ts=2.0)    # a fresh add repairs the entry
+    assert [o.time_s for o in fb.get(KEY)] == [0.6]
+
+
+def test_feedback_foreign_schema_version_skipped(tmp_path):
+    import json
+
+    fb = FeedbackStore(str(tmp_path))
+    fb.add(KEY, 0.5, 2e9, ts=1.0)
+    with open(fb.path_for(KEY)) as f:
+        payload = json.load(f)
+    payload["version"] = 99
+    with open(fb.path_for(KEY), "w") as f:
+        json.dump(payload, f)
+    assert fb.get(KEY) == [] and fb.total() == 0
+    assert fb.stats.corrupt >= 1
+
+
+def test_feedback_merge_unions_by_observation_id(tmp_path):
+    a = FeedbackStore(str(tmp_path / "a"))
+    b = FeedbackStore(str(tmp_path / "b"))
+    a.add(KEY, 0.5, 2e9, ts=1.0)
+    b.add(KEY, 0.5, 2e9, ts=1.0)     # same content: same id
+    b.add(KEY, 0.9, 4e9, ts=2.0)
+    other = ("cd" * 8, 4, 64)
+    b.add(other, 1.5, 5e9, ts=3.0)
+    assert a.merge(b) == 2           # one dup skipped, two imported
+    assert a.total() == 3 and set(a.keys()) == {KEY, other}
+    assert a.merge(b) == 0           # idempotent
+
+
+def test_feedback_compact_ttl_and_per_key_cap(tmp_path):
+    fb = FeedbackStore(str(tmp_path))
+    now = time.time()
+    for i in range(6):  # one key, mixed ages
+        fb.add(KEY, 0.1 * (i + 1), 1e9, ts=now - 1000 + 100 * i)
+    other = ("cd" * 8, 4, 64)
+    fb.add(other, 1.0, 1e9, ts=now - 5000)      # whole key expires
+    out = fb.compact(max_age_s=950.0, max_per_key=3)
+    assert out["expired"] >= 1 and out["kept"] == 3
+    kept = fb.get(KEY)
+    assert len(kept) == 3                        # newest 3 survive
+    assert [round(o.time_s, 1) for o in kept] == [0.4, 0.5, 0.6]
+    assert fb.get(other) == []                   # emptied key file removed
+    assert fb.total() == 3
+
+
+# -- property tests (run with or without hypothesis via tests/_hypo.py) ------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8))
+def test_fingerprint_stable_across_equivalent_spellings(seed, n):
+    """Equivalent payload spellings must share one fingerprint.
+
+    Dict insertion order, set construction order, and numpy integer
+    scalars (vs python ints) are presentation details, not content.
+    """
+    from repro.serve.prediction_service import config_fingerprint
+
+    rng = np.random.default_rng(seed)
+    items = [(f"k{i}", int(rng.integers(100))) for i in range(n)]
+    tags = [f"t{int(v)}" for _, v in items]
+
+    def cfg(table, tag_list, scalar):
+        class _C:
+            def __init__(self):
+                self.name = "prop"
+                self.table = dict(table)
+                self.tags = set(tag_list)
+                self.w = scalar
+        return _C()
+
+    base = config_fingerprint(cfg(items, tags, int(items[0][1])))
+    assert base == config_fingerprint(
+        cfg(list(reversed(items)), list(reversed(tags)),
+            np.int64(items[0][1])))
+    # different content: different fingerprint
+    bumped = [(k, v + 1) for k, v in items]
+    assert base != config_fingerprint(cfg(bumped, tags, int(items[0][1])))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 10))
+def test_feedback_merge_is_order_independent(seed, n):
+    """Any add/merge order converges to the same store contents."""
+    rng = np.random.default_rng(seed)
+    obs = [(("ff" * 8, int(rng.integers(1, 4)) * 2, 32),
+            float(rng.integers(1, 100)) / 10.0,
+            float(rng.integers(1, 100)) * 1e6,
+            float(i)) for i in range(n)]
+    with tempfile.TemporaryDirectory() as root:
+        fwd = FeedbackStore(root + "/fwd")
+        rev = FeedbackStore(root + "/rev")
+        for key, t, m, ts in obs:
+            fwd.add(key, t, m, ts=ts)
+        for key, t, m, ts in reversed(obs):
+            rev.add(key, t, m, ts=ts)
+        assert fwd.snapshot() == rev.snapshot()
+        # split + cross-merge in both orders: same fixed point
+        a1 = FeedbackStore(root + "/a1")
+        a2 = FeedbackStore(root + "/a2")
+        half = n // 2
+        for key, t, m, ts in obs[:half]:
+            a1.add(key, t, m, ts=ts)
+        for key, t, m, ts in obs[half:]:
+            a2.add(key, t, m, ts=ts)
+        m1 = FeedbackStore(root + "/m1")
+        m2 = FeedbackStore(root + "/m2")
+        m1.merge(a1), m1.merge(a2)
+        m2.merge(a2), m2.merge(a1)
+        assert m1.snapshot() == m2.snapshot() == fwd.snapshot()
+
+
+# -- calibration window -------------------------------------------------------
+
+
+def test_calibration_window_mre_and_drift():
+    cal = CalibrationWindow(window=8)
+    assert cal.metrics()["count"] == 0
+    cal.observe(1.0, 2.0, 4e9, 2e9, generation=0)   # under-time, over-mem
+    cal.observe(3.0, 3.0, 1e9, 1e9, generation=1)   # perfect
+    m = cal.metrics()
+    assert m["count"] == 2
+    assert m["time_mre"] == pytest.approx(0.25)      # (0.5 + 0) / 2
+    assert m["time_drift"] == pytest.approx(-0.25)   # signed: underestimates
+    assert m["mem_mre"] == pytest.approx(0.5)
+    assert m["by_generation"][0]["time_mre"] == pytest.approx(0.5)
+    assert m["by_generation"][1]["time_mre"] == pytest.approx(0.0)
+    cal.reset()
+    assert cal.metrics()["count"] == 0
+
+
+# -- refit thresholds + generation lifecycle ---------------------------------
+
+
+def _svc_with_traced_keys(tmp_path, n_cfgs=4, seeds=(2, 4), seq=32):
+    """Service + the (cfg, batch, seq) grid it has already traced."""
+    calls = []
+    svc = PredictionService(_abacus(), tracer=_counting_tracer(calls),
+                            store=TraceStore(str(tmp_path / "traces")))
+    grid = [(_fake_cfg(f"c{i}"), b, seq)
+            for i in range(n_cfgs) for b in seeds]
+    for cfg, b, s in grid:
+        svc.predict_one(cfg, b, s)
+    return svc, grid, calls
+
+
+def test_refit_triggers_on_count_threshold(tmp_path):
+    svc, grid, _ = _svc_with_traced_keys(tmp_path)
+    fb = FeedbackStore(str(tmp_path / "fb"))
+    ref = OnlineRefitter(svc, fb, min_observations=3, min_train_records=2)
+    for i, (cfg, b, s) in enumerate(grid[:3]):
+        assert not ref.should_refit()
+        assert ref.refit_now() is None          # below threshold: no-op
+        fb.add(svc.cache_key(cfg, b, s), 0.5 + i, 2e9)
+        ref.notify()
+    assert ref.should_refit()                   # 3rd observation arms it
+    gen = ref.refit_now()
+    assert gen is not None and gen.number == 1
+    assert gen.n_feedback == 3 and gen.n_unresolved == 0
+    assert svc.generation == 1                  # default sink: the service
+    # watermark: consumed feedback does not re-arm the trigger
+    assert ref.fresh_observations() == 0
+    assert not ref.should_refit() and ref.refit_now() is None
+
+
+def test_refit_triggers_on_staleness(tmp_path):
+    svc, grid, _ = _svc_with_traced_keys(tmp_path)
+    fb = FeedbackStore(str(tmp_path / "fb"))
+    ref = OnlineRefitter(svc, fb, min_observations=100,
+                         max_staleness_s=0.05, min_train_records=2)
+    cfg, b, s = grid[0]
+    fb.add(svc.cache_key(cfg, b, s), 0.5, 2e9)
+    cfg2, b2, s2 = grid[1]
+    fb.add(svc.cache_key(cfg2, b2, s2), 0.7, 3e9)
+    ref.notify()
+    assert not ref.should_refit()               # fresh but not stale yet
+    time.sleep(0.08)
+    assert ref.should_refit()                   # stale feedback forces it
+    assert ref.refit_now().number == 1
+
+
+def test_refit_skips_unresolvable_keys(tmp_path):
+    svc, grid, _ = _svc_with_traced_keys(tmp_path)
+    fb = FeedbackStore(str(tmp_path / "fb"))
+    ref = OnlineRefitter(svc, fb, min_observations=1, min_train_records=2)
+    # a key the service never traced cannot be joined with features
+    fb.add(("never" + "0" * 11, 2, 32), 1.0, 1e9)
+    assert ref.refit_now() is None              # nothing resolvable
+    for cfg, b, s in grid[:2]:
+        fb.add(svc.cache_key(cfg, b, s), 0.5, 2e9)
+    gen = ref.refit_now()
+    assert gen is not None
+    assert gen.n_feedback == 2 and gen.n_unresolved == 1
+
+
+def test_worker_does_not_spin_on_unresolvable_feedback(tmp_path):
+    """A refit attempt that makes no progress (feedback keys with no
+    stored trace) must park the worker until the next notify/poll, not
+    busy-loop full-store scans while should_refit() stays true."""
+    svc = PredictionService(_abacus(), tracer=_counting_tracer([]))
+    fb = FeedbackStore(str(tmp_path))
+    ref = OnlineRefitter(svc, fb, min_observations=1, min_train_records=1)
+    attempts = []
+    orig = ref.training_records
+    ref.training_records = lambda: (attempts.append(1), orig())[1]
+    with ref:
+        fb.add(("dead" + "0" * 12, 2, 32), 1.0, 1e9)  # never traced
+        ref.notify()
+        time.sleep(0.4)
+        # parked after the no-progress attempt: fresh feedback exists but
+        # retrying without new information is pointless
+        assert ref.fresh_observations() == 1
+        assert not ref.should_refit()
+    assert len(attempts) <= 2            # one gated attempt per wakeup
+    # new feedback re-arms the trigger (and notify clears the parking)
+    fb.add(("dead" + "0" * 12, 4, 32), 1.0, 1e9)
+    ref.notify()
+    assert ref.should_refit()
+
+
+def test_refit_targets_use_newest_observation_window(tmp_path):
+    """A second drift must displace the first: targets average only each
+    key's newest obs_window observations, not the whole history."""
+    svc, grid, _ = _svc_with_traced_keys(tmp_path, n_cfgs=1, seeds=(2,))
+    cfg, b, s = grid[0]
+    key = svc.cache_key(cfg, b, s)
+    fb = FeedbackStore(str(tmp_path / "fb"))
+    for i in range(4):                  # old regime: 3x
+        fb.add(key, 3.0, 3e9, ts=float(i))
+    for i in range(4):                  # reality returned to 1x
+        fb.add(key, 1.0, 1e9, ts=float(10 + i))
+    ref = OnlineRefitter(svc, fb, obs_window=4, min_train_records=1)
+    records, consumed, unresolved = ref.training_records()
+    assert consumed == 8 and unresolved == 0
+    assert records[-1].time_s == pytest.approx(1.0)   # not a 2x blend
+    assert records[-1].mem_bytes == pytest.approx(1e9)
+
+
+def test_generation_numbers_are_monotone(tmp_path):
+    svc, grid, _ = _svc_with_traced_keys(tmp_path)
+    fb = FeedbackStore(str(tmp_path / "fb"))
+    ref = OnlineRefitter(svc, fb, min_observations=1, min_train_records=2)
+    numbers = []
+    for i, (cfg, b, s) in enumerate(grid[:3]):
+        fb.add(svc.cache_key(cfg, b, s), 0.5 + i, 2e9)
+        fb.add(svc.cache_key(grid[3][0], grid[3][1], grid[3][2]),
+               1.0 + i, 3e9, ts=float(i))
+        gen = ref.refit_now()
+        assert gen is not None
+        numbers.append(gen.number)
+    assert numbers == [1, 2, 3]
+    assert svc.generation == 3
+
+
+def test_adopt_refuses_stale_generation():
+    svc = PredictionService(_abacus(), tracer=_counting_tracer([]))
+    ab1, ab2 = _abacus(seed=1), _abacus(seed=2)
+    assert svc.adopt(ab1, 1)
+    assert not svc.adopt(ab2, 1)     # replay of the same number
+    assert not svc.adopt(ab2, 0)     # rollback attempt
+    assert svc.generation == 1 and svc.abacus is ab1
+    assert svc.adopt(ab2)            # unnumbered: next in sequence
+    assert svc.generation == 2
+    assert svc.publish_generation(ModelGeneration(number=5, abacus=ab1))
+    assert svc.generation == 5
+
+
+def test_swap_invalidates_prediction_cache_not_traces(tmp_path):
+    ab = _CountingAbacus(_abacus())
+    calls = []
+    svc = PredictionService(ab, tracer=_counting_tracer(calls),
+                            store=TraceStore(str(tmp_path)))
+    cfg = _fake_cfg()
+    e1 = svc.predict_one(cfg, 2, 32)
+    e2 = svc.predict_one(cfg, 2, 32)
+    assert ab.predict_calls == 1                 # second served from est cache
+    assert svc.stats.est_hits == 1
+    assert e1["generation"] == e2["generation"] == 0
+    ab2 = _CountingAbacus(_abacus(seed=3))
+    assert svc.adopt(ab2, 1)
+    assert svc.cache_info()["est_entries"] == 0  # prediction cache dropped
+    e3 = svc.predict_one(cfg, 2, 32)
+    assert e3["generation"] == 1
+    assert ab2.predict_calls == 1                # new ensembles actually ran
+    assert len(calls) == 1                       # trace cache survived intact
+    assert len(svc.store) == 1                   # persisted traces untouched
+    assert svc.stats.adopts == 1
+
+
+# -- admission: completion releases reservations + feeds observations ---------
+
+
+class _ObservingPredictor:
+    """predict_many stub that records observe() calls like AbacusServer."""
+
+    def __init__(self, table):
+        self.table = table
+        self.observed = []
+
+    def predict_many(self, queries):
+        return [{"model": q.cfg.name, "generation": 7, **self.table[q.cfg.name]}
+                for q in queries]
+
+    def observe(self, cfg, batch, seq, time_s, mem_bytes, **kw):
+        self.observed.append((cfg.name, batch, seq, time_s, mem_bytes, kw))
+
+
+def _est(t, mem_gib):
+    return {"time_s": t, "memory_bytes": mem_gib * GIB}
+
+
+def test_cluster_returns_to_baseline_after_all_jobs_finish():
+    pred = _ObservingPredictor({"a": _est(10.0, 4.0), "b": _est(7.0, 2.0)})
+    machines = [Machine("m1", 32 * GIB), Machine("m2", 32 * GIB)]
+    ctl = AdmissionController(pred, machines, plan="optimal")
+    baseline = ctl.cluster_state()
+    verdicts = []
+    for wave in range(3):
+        verdicts += ctl.admit([Query(_fake_cfg("a"), 2, 32),
+                               Query(_fake_cfg("b"), 4, 32)])
+    assert all(v.admitted for v in verdicts)
+    state = ctl.cluster_state()
+    assert state["resident_jobs"] == 6 and state["makespan_s"] > 0
+    for v in verdicts:  # mixed API: complete() and report_completion()
+        if int(v.job_id.split("#")[1]) % 2:
+            ctl.complete(v.job_id)
+        else:
+            ctl.report_completion(v.job_id, time_s=v.time_s * 2,
+                                  mem_bytes=v.mem_bytes)
+    end = ctl.cluster_state()
+    assert end["resident_jobs"] == 0
+    for m in end["machines"]:
+        assert m["busy_s"] == pytest.approx(0.0, abs=1e-9)
+        assert m["reserved_bytes"] == pytest.approx(0.0, abs=1e-3)
+        assert m["jobs"] == []
+    assert end["makespan_s"] == pytest.approx(baseline["makespan_s"])
+
+
+def test_report_completion_feeds_observation_with_prediction_context():
+    pred = _ObservingPredictor({"a": _est(10.0, 4.0)})
+    ctl = AdmissionController(pred, [Machine("m1", 8 * GIB)], plan="optimal")
+    v = ctl.admit([Query(_fake_cfg("a"), 2, 32)])[0]
+    summary = ctl.report_completion(v.job_id, time_s=30.0, mem_bytes=6 * GIB)
+    assert summary["observed"] and summary["generation"] == 7
+    name, batch, seq, t, m, kw = pred.observed[0]
+    assert (name, batch, seq) == ("a", 2, 32)
+    assert t == 30.0 and m == 6 * GIB
+    assert kw["predicted_time_s"] == pytest.approx(10.0)
+    assert kw["generation"] == 7 and kw["job_id"] == v.job_id
+    # completion without measurements releases but does not observe
+    v2 = ctl.admit([Query(_fake_cfg("a"), 4, 32)])[0]
+    assert not ctl.report_completion(v2.job_id)["observed"]
+    assert len(pred.observed) == 1
+    with pytest.raises(KeyError):
+        ctl.report_completion(v.job_id)          # already completed
+
+
+def test_report_completion_normalizes_verdict_domain_measurements():
+    """Measured costs arrive in the verdict domain (x time_scale, + pad)
+    and must be mapped back to the predictor's per-step domain before
+    feeding calibration/refit — otherwise a perfectly calibrated
+    predictor would read as 100x drifted."""
+    pred = _ObservingPredictor({"a": _est(10.0, 4.0)})
+    ctl = AdmissionController(pred, [Machine("m1", 32 * GIB)],
+                              plan="optimal", time_scale=100.0,
+                              mem_pad=GIB)
+    v = ctl.admit([Query(_fake_cfg("a"), 2, 32)])[0]
+    assert v.time_s == pytest.approx(1000.0)     # verdict domain
+    assert v.mem_bytes == pytest.approx(5 * GIB)
+    # the job measured exactly what the verdict promised: zero drift
+    s = ctl.report_completion(v.job_id, time_s=v.time_s,
+                              mem_bytes=v.mem_bytes)
+    _, _, _, t, m, kw = pred.observed[0]
+    assert t == pytest.approx(10.0)              # back in per-step domain
+    assert m == pytest.approx(4 * GIB)
+    assert s["measured_time_s"] == pytest.approx(10.0)
+    assert kw["predicted_time_s"] == pytest.approx(10.0)
+
+
+def test_admission_rejects_non_assigning_plan():
+    with pytest.raises(ValueError, match="assignment"):
+        AdmissionController(_ObservingPredictor({}), [Machine("m", GIB)],
+                            plan="random")
+
+
+# -- end-to-end: drifted workload, refit, MRE drops >= 2x ---------------------
+
+TIME_DRIFT, MEM_DRIFT = 3.0, 1.5
+
+
+def _measure_wave(ctl, queries, truth=None):
+    """One wave: admit, 'run', report measured costs.
+
+    The drifted *reality* is fixed on the first wave (generation-0
+    predictions scaled by the drift factors) and replayed verbatim on
+    later waves — reality does not move when the predictor does.
+    """
+    verdicts = ctl.admit(queries)
+    assert all(v.admitted for v in verdicts)
+    if truth is None:
+        truth = [(v.time_s * TIME_DRIFT, v.mem_bytes * MEM_DRIFT)
+                 for v in verdicts]
+    for v, (t, m) in zip(verdicts, truth):
+        ctl.report_completion(v.job_id, time_s=t, mem_bytes=m)
+    return truth
+
+
+def test_windowed_mre_halves_after_one_refit_cycle(tmp_path):
+    """The ISSUE acceptance demo, deterministic: wave 1 under generation 0
+    sees the full drift error; one feedback/refit cycle later, wave 2 under
+    generation 1 predicts the drifted regime, and the per-generation
+    windowed time-MRE from ``server.stats()`` drops by >= 2x."""
+    svc = PredictionService(_abacus(), tracer=_counting_tracer([]),
+                            store=TraceStore(str(tmp_path / "traces")))
+    fb = FeedbackStore(str(tmp_path / "fb"))
+    ref = OnlineRefitter(svc, fb, min_observations=6, min_train_records=4,
+                         seed_records=None)
+    machines = [Machine("m1", 1e21), Machine("m2", 1e21)]
+    queries = [Query(_fake_cfg(n), b, s)
+               for n in ("a", "b", "c") for b in (2, 4) for s in (32, 64)]
+    with AbacusServer(svc, feedback=fb, refitter=ref) as srv:
+        ctl = AdmissionController(srv, machines, plan="optimal")
+        truth = _measure_wave(ctl, queries)
+        pre = srv.stats()["calibration"]
+        assert pre["by_generation"][0]["time_mre"] == pytest.approx(
+            (TIME_DRIFT - 1) / TIME_DRIFT)       # |p - 3p| / 3p
+        assert pre["time_drift"] < 0             # drift: we underestimate
+        gen = ref.refit_now()                    # threshold was crossed
+        assert gen is not None and gen.number == 1
+        for _ in range(100):                     # swap lands between ticks
+            if svc.generation == 1:
+                break
+            time.sleep(0.02)
+        assert svc.generation == 1
+        _measure_wave(ctl, queries, truth)
+        post = srv.stats()["calibration"]["by_generation"]
+    assert srv.stats.gen_swaps == 1              # worker applied it once
+    mre0 = post[0]["time_mre"]
+    mre1 = post[1]["time_mre"]
+    assert mre1 <= mre0 / 2.0, (mre0, mre1)      # acceptance: >= 2x drop
+    assert post[1]["mem_mre"] <= post[0]["mem_mre"] / 2.0
+    # the refit actually learned the drifted scale, not a constant
+    assert srv.stats()["calibration"]["count"] == 2 * len(queries)
+
+
+def test_warm_tick_skips_ensemble_pass_entirely():
+    ab = _CountingAbacus(_abacus())
+    svc = PredictionService(ab, tracer=_counting_tracer([]))
+    with AbacusServer(svc) as srv:
+        first = srv.predict_many([(_fake_cfg(), b, 32) for b in (2, 4)])
+        again = srv.predict_many([(_fake_cfg(), b, 32) for b in (2, 4)])
+    assert ab.predict_calls == 1        # repeat tick: prediction cache
+    assert srv.stats.ensemble_passes == 1
+    assert [e["time_s"] for e in first] == [e["time_s"] for e in again]
+    assert svc.stats.est_hits >= 2
+
+
+def test_hot_swap_never_mixes_generations_within_a_tick():
+    calls = []
+    base = _counting_tracer(calls)
+    started, release = threading.Event(), threading.Event()
+
+    def gated_tracer(cfg, batch, seq):
+        started.set()
+        release.wait(5)
+        return base(cfg, batch, seq)
+
+    svc = PredictionService(_abacus(), tracer=gated_tracer)
+    with AbacusServer(svc) as srv:
+        first = srv.submit_many([(_fake_cfg("a"), b, 32) for b in (2, 4)])
+        assert started.wait(5)                   # tick 1 is in flight
+        # publish a new generation MID-TICK, then pile on more queries
+        assert srv.publish_generation(
+            ModelGeneration(number=1, abacus=_abacus(seed=5)))
+        late = srv.submit_many([(_fake_cfg("a"), b, 32) for b in (2, 4, 8)])
+        release.set()
+        ests = [f.result(10) for f in first + late]
+    by_tick = {}
+    for e in ests:
+        by_tick.setdefault(e["tick"], set()).add(e["generation"])
+    # no tick mixes generations; the in-flight tick finished on gen 0
+    assert all(len(gens) == 1 for gens in by_tick.values()), by_tick
+    assert by_tick[1] == {0}
+    assert ests[-1]["generation"] == 1           # later ticks swapped
+    assert srv.stats.gen_swaps == 1
+
+
+# -- TraceStore compaction (satellite) is in test_trace_store.py --------------
+
+
+# -- tier-2: live server, real tracer, concurrent feedback/refit/swap ---------
+
+
+@pytest.mark.slow
+def test_live_server_feedback_refit_hot_swap_under_concurrency():
+    """Drive the whole loop with the real jaxpr tracer and a background
+    refit worker while client threads keep submitting."""
+    from repro.configs import get_config, reduced_config
+
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    with tempfile.TemporaryDirectory() as root:
+        svc = PredictionService(_abacus(), store=TraceStore(root + "/traces"))
+        fb = FeedbackStore(root + "/fb")
+        ref = OnlineRefitter(svc, fb, min_observations=4,
+                             min_train_records=3)
+        queries = [(cfg, b, s) for b in (2, 4) for s in (32, 64)]
+        with ref, AbacusServer(svc, feedback=fb, refitter=ref) as srv:
+            ctl = AdmissionController(srv, [Machine("m1", 1e21)],
+                                      plan="optimal")
+            stop = threading.Event()
+            errors = []
+
+            def client():
+                while not stop.is_set():
+                    try:
+                        for f in srv.submit_many(queries):
+                            f.result(60)
+                    except Exception as e:  # pragma: no cover
+                        errors.append(e)
+                        return
+
+            threads = [threading.Thread(target=client) for _ in range(3)]
+            for t in threads:
+                t.start()
+            verdicts = ctl.admit([Query(c, b, s) for c, b, s in queries])
+            truth = [(v.time_s * 2.5, v.mem_bytes * 1.2) for v in verdicts]
+            for v, (mt, mm) in zip(verdicts, truth):
+                ctl.report_completion(v.job_id, time_s=mt, mem_bytes=mm)
+            deadline = time.time() + 60
+            while svc.generation == 0 and time.time() < deadline:
+                time.sleep(0.1)
+            # keep clients submitting across the swap, then drain
+            time.sleep(0.3)
+            stop.set()
+            for t in threads:
+                t.join(60)
+            assert not errors
+            assert svc.generation >= 1           # background refit landed
+            verdicts2 = ctl.admit([Query(c, b, s) for c, b, s in queries])
+            for v, (mt, mm) in zip(verdicts2, truth):  # same fixed reality
+                ctl.report_completion(v.job_id, time_s=mt, mem_bytes=mm)
+            stats = srv.stats()
+        by_gen = stats["calibration"]["by_generation"]
+        assert 0 in by_gen and max(by_gen) >= 1
+        assert by_gen[max(by_gen)]["time_mre"] < by_gen[0]["time_mre"]
+        assert stats["refit"]["refits"] >= 1
+        assert ctl.cluster_state()["resident_jobs"] == 0

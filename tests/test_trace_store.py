@@ -96,6 +96,80 @@ def test_clear_removes_files(tmp_path):
     assert len(store) == 0
 
 
+# -- compaction + TTL ---------------------------------------------------------
+
+
+def test_compact_drops_stale_schema_generations(tmp_path):
+    store = TraceStore(str(tmp_path))
+    keep = ("66" * 8, 2, 32)
+    store.put(keep, _record())
+    foreign = ("77" * 8, 4, 32)
+    store.put(foreign, _record(batch=4))
+    with open(store.path_for(foreign)) as f:
+        payload = json.load(f)
+    payload["version"] = SCHEMA_VERSION + 1
+    with open(store.path_for(foreign), "w") as f:
+        json.dump(payload, f)
+    with open(store.path_for(("88" * 8, 8, 32)), "w") as f:
+        f.write("{ not json !!")
+    out = store.compact()
+    assert out["stale_schema"] == 2 and out["removed"] == 2
+    assert out["kept"] == 1
+    assert store.get(keep) is not None           # survivor still serves
+    assert not os.path.exists(store.path_for(foreign))
+
+
+def test_compact_ttl_and_entry_cap_keep_newest(tmp_path):
+    store = TraceStore(str(tmp_path))
+    keys = [("99" * 8, batch, 32) for batch in (2, 4, 8, 16)]
+    now = __import__("time").time()
+    for i, key in enumerate(keys):
+        store.put(key, _record(batch=key[1]))
+        # ages: 100s, 70s, 40s, 10s old (oldest first)
+        age = 100 - 30 * i
+        os.utime(store.path_for(key), (now - age, now - age))
+    out = store.compact(max_age_s=80.0)          # TTL: drops only the oldest
+    assert out["expired"] == 1 and out["kept"] == 3
+    assert store.get(keys[0]) is None and store.get(keys[1]) is not None
+    out = store.compact(max_entries=1)           # cap: newest survives
+    assert out["over_cap"] == 2 and out["kept"] == 1
+    assert store.get(keys[3]) is not None
+    assert [store.get(k) for k in keys[:3]] == [None] * 3
+
+
+def test_compact_is_safe_under_concurrent_readers(tmp_path):
+    import threading
+
+    store = TraceStore(str(tmp_path))
+    keys = [("aa" * 8, batch, 32) for batch in range(2, 34, 2)]
+    for key in keys:
+        store.put(key, _record(batch=key[1]))
+    reader = TraceStore(str(tmp_path))           # separate stats/lock
+    stop = threading.Event()
+    errors = []
+
+    def hammer():
+        while not stop.is_set():
+            for key in keys:
+                try:
+                    rec = reader.get(key)        # record or None, never torn
+                    assert rec is None or rec.batch_size == key[1]
+                except Exception as e:  # pragma: no cover
+                    errors.append(e)
+                    return
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for cap in (12, 6, 2, 0):
+        store.compact(max_entries=cap)
+    stop.set()
+    for t in threads:
+        t.join(10)
+    assert not errors
+    assert len(store) == 0
+
+
 # -- store-backed PredictionService ------------------------------------------
 
 
@@ -220,7 +294,8 @@ def test_clear_cache_resets_inflight_and_optionally_stats():
     svc.clear_cache(reset_stats=True)
     assert svc.stats.as_dict() == {"hits": 0, "misses": 0, "evictions": 0,
                                    "store_hits": 0, "traces": 0,
-                                   "store_errors": 0, "queries": 0}
+                                   "store_errors": 0, "est_hits": 0,
+                                   "adopts": 0, "queries": 0}
     assert svc.cache_info()["entries"] == 0
 
 
