@@ -1,0 +1,195 @@
+"""Cluster fabric: 4 sharded gateway replicas vs the 1-replica floor.
+
+The honest fleet win on one box is **aggregate cache capacity**: each
+``PredictionService`` holds at most ``max_cache_entries`` records (the
+per-process memory budget), so a working set of W distinct queries with
+W > budget thrashes a single gateway — every query re-loads its trace
+from the warm ``TraceStore`` and re-runs the ensemble, because the LRU
+and the per-generation prediction cache both cycle. A 4-replica
+``ClusterFrontend`` shards the same working set by config fingerprint:
+each replica owns ~W/4 keys, its slice fits the same per-replica
+budget, and the steady state serves from memory.
+
+Both sides run against fully *warm stores* (populated by a cold pass,
+then fresh services — the "new process" start) and the same client
+count; the tracer is instrumented to prove NEITHER side traces during
+measurement. A parity check asserts the 4-replica fleet returns the
+same estimates as the floor. Acceptance: 4-replica throughput >= 2x the
+1-replica floor.
+
+    PYTHONPATH=src python benchmarks/bench_cluster.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.automl.models import RandomForestRegressor
+from repro.core.features import ProfileRecord
+from repro.core.predictor import DNNAbacus
+from repro.serve import ClusterFrontend
+
+
+def _fit_records(n=80, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for i in range(n):
+        batch = int(rng.choice([2, 4, 8, 16]))
+        seq = int(rng.choice([32, 64, 128]))
+        dots = float(rng.integers(4, 60))
+        flops = batch * seq * dots * 1e6
+        edges = {("dot", "add"): dots, ("add", "tanh"): dots,
+                 ("tanh", "dot"): dots - 1}
+        recs.append(ProfileRecord(
+            model_name=f"m{i}", family="dense", batch_size=batch,
+            input_size=seq, channels=64, learning_rate=1e-3, epoch=1,
+            optimizer="adamw", layers=int(rng.integers(2, 16)), flops=flops,
+            params=int(dots * 1e5), nsm_edges=edges,
+            time_s=flops / 5e10, mem_bytes=1e6 * dots + 4.0 * batch * seq))
+    return recs
+
+
+def _fit_abacus(seed=0):
+    fac = lambda s: [RandomForestRegressor(n_trees=10, seed=s)]
+    return DNNAbacus(seed=seed).fit(_fit_records(seed=seed),
+                                    candidate_factory=fac)
+
+
+class _Cfg:
+    """Duck-typed config: distinct fingerprints, cheap to hash."""
+
+    def __init__(self, i):
+        self.name = f"job{i:04d}"
+        self.family = "dense"
+        self.num_layers = 2 + i % 14
+        self.d_model = 64 + 16 * (i % 8)
+        self.widen = 1.0 + 0.125 * (i % 4)
+
+
+def _make_tracer(calls):
+    def tracer(cfg, batch, seq):
+        calls.append(cfg.name)
+        # never builtin hash(): records must be process/seed-deterministic
+        rng = np.random.default_rng(sum(cfg.name.encode()) * 7 + batch)
+        dots = float(rng.integers(4, 60))
+        edges = {("dot", "add"): dots, ("add", "tanh"): dots}
+        return ProfileRecord(
+            model_name=cfg.name, family=cfg.family, batch_size=batch,
+            input_size=seq, channels=cfg.d_model, learning_rate=1e-3,
+            epoch=1, optimizer="adamw", layers=cfg.num_layers,
+            flops=batch * seq * dots * 1e6, params=int(dots * 1e5),
+            nsm_edges=edges)
+    return tracer
+
+
+def _fleet(ab, n, root, budget, calls):
+    return ClusterFrontend(ab, n_replicas=n,
+                           trace_root=os.path.join(root, f"n{n}"),
+                           tracer=_make_tracer(calls),
+                           service_kw={"max_cache_entries": budget})
+
+
+def _drain(frontend, workload, n_clients):
+    """Wall time for ``n_clients`` threads to submit + await ``workload``."""
+    shares = [s for s in (workload[i::n_clients] for i in range(n_clients))
+              if s]
+    barrier = threading.Barrier(len(shares) + 1)
+
+    def client(share):
+        barrier.wait()
+        for f in frontend.submit_many(share):
+            f.result(120)
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in shares]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = True, out: str = "BENCH_cluster.json"):
+    budget = 48 if smoke else 128          # per-replica memory budget
+    n_keys = int(budget * 2.5)             # working set > one budget
+    reps = 3 if smoke else 5
+    clients = 8
+    ab = _fit_abacus()
+    keyset = [( _Cfg(i), 2 + 2 * (i % 2), 32) for i in range(n_keys)]
+    workload = keyset * reps
+    root = tempfile.mkdtemp(prefix="abacus_cluster_")
+    rows = []
+    try:
+        qps, parity = {}, {}
+        for n in (1, 4):
+            # cold pass populates this fleet's store slices...
+            with _fleet(ab, n, root, n_keys + 8, []) as cold:
+                cold.predict_many(keyset)
+            # ...then a FRESH fleet (new services, warm slices) measures
+            calls = []
+            fleet = _fleet(ab, n, root, budget, calls)
+            with fleet:
+                fleet.predict_many(keyset)  # steady state, not first touch
+                dt = _drain(fleet, workload, clients)
+                parity[n] = [(e["model"], round(e["time_s"], 12),
+                              round(e["memory_bytes"], 6))
+                             for e in fleet.predict_many(keyset)]
+            qps[n] = len(workload) / dt
+            assert not calls, f"{n}-replica warm run traced {len(calls)} keys"
+            info = fleet.server_info()["fleet"]
+            rows.append((f"qps_{n}_replicas", qps[n]))
+            rows.append((f"store_hits_{n}_replicas",
+                         float(sum(r.service.stats.store_hits
+                                   for r in fleet.replicas))))
+            rows.append((f"ensemble_passes_{n}_replicas",
+                         float(info["ensemble_passes"])))
+        assert parity[1] == parity[4], "fleet estimates diverged from floor"
+        rows = [
+            ("working_set", float(n_keys)),
+            ("cache_budget_per_replica", float(budget)),
+            ("workload", float(len(workload))),
+            ("clients", float(clients)),
+        ] + rows + [
+            ("cluster_vs_floor", qps[4] / qps[1]),
+        ]
+        if out:
+            payload = {name: val for name, val in rows}
+            payload["smoke"] = smoke
+            with open(out, "w") as f:
+                json.dump(payload, f, indent=2)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small working set (seconds; CI tier-1)")
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out=args.out)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    speedup = dict(rows)["cluster_vs_floor"]
+    if speedup < 2.0:
+        print(f"# FAIL: 4-replica throughput {speedup:.2f}x the 1-replica "
+              "floor (floor 2x)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

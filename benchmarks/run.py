@@ -25,6 +25,7 @@ BENCHES = [
     ("service", "benchmarks.bench_service"),            # online query engine
     ("server", "benchmarks.bench_server"),              # micro-batched gateway
     ("refit", "benchmarks.bench_refit"),                # online refit loop
+    ("cluster", "benchmarks.bench_cluster"),            # sharded replica fleet
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
 

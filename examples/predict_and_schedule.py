@@ -32,8 +32,9 @@ from repro.core.predictor import DNNAbacus
 from repro.core.profiler import profile_zoo
 from repro.core.scheduler import (Machine, jobs_from_estimates, schedule_ga,
                                   schedule_jobs)
-from repro.serve import (AbacusServer, AdmissionController, FeedbackStore,
-                         OnlineRefitter, PredictionService, Query, TraceStore)
+from repro.serve import (AbacusServer, AdmissionController, ClusterFrontend,
+                         FeedbackStore, OnlineRefitter, PredictionService,
+                         Query, TraceStore)
 
 GIB = 2**30
 TIME_DRIFT, MEM_DRIFT = 3.0, 1.5  # synthetic fleet drift ("reality")
@@ -142,29 +143,52 @@ def main():
         if service.generation == 0:
             print(f"  no generation published within 60 s "
                   f"(refit state: {refitter.info()})")
-            return
-        gen = refitter.generation
-        print(f"  generation {gen.number} published "
-              f"(fit on {gen.n_train_records} records, "
-              f"{gen.n_feedback} observations, "
-              f"refit {refitter.last_refit_s*1e3:.0f} ms); "
-              f"service now at generation {service.generation}")
-
-        # wave 3 runs under the refit generation against the SAME reality
-        wave3_qs = [Query(cfg, b, 32) for b in (2, 4)]
-        for v, q in zip(ctl.admit(wave3_qs), wave3_qs):
-            if v.admitted:
-                mt, mm = truth[(q.batch, q.seq)]
-                ctl.report_completion(v.job_id, time_s=mt, mem_bytes=mm)
-        by_gen = server.stats()["calibration"]["by_generation"]
-        mre0 = by_gen.get(0, {}).get("time_mre")
-        mre1 = by_gen.get(service.generation, {}).get("time_mre")
-        if mre0 is None or mre1 is None:
-            print(f"  calibration by generation: {by_gen}")
         else:
-            print(f"  windowed time-MRE: generation 0 = {mre0:.3f} "
-                  f"-> generation {service.generation} = {mre1:.3f} "
-                  f"({mre0 / max(mre1, 1e-12):.1f}x better)")
+            gen = refitter.generation
+            print(f"  generation {gen.number} published "
+                  f"(fit on {gen.n_train_records} records, "
+                  f"{gen.n_feedback} observations, "
+                  f"refit {refitter.last_refit_s*1e3:.0f} ms); "
+                  f"service now at generation {service.generation}")
+
+            # wave 3 runs under the refit generation, SAME reality
+            wave3_qs = [Query(cfg, b, 32) for b in (2, 4)]
+            for v, q in zip(ctl.admit(wave3_qs), wave3_qs):
+                if v.admitted:
+                    mt, mm = truth[(q.batch, q.seq)]
+                    ctl.report_completion(v.job_id, time_s=mt, mem_bytes=mm)
+            by_gen = server.stats()["calibration"]["by_generation"]
+            mre0 = by_gen.get(0, {}).get("time_mre")
+            mre1 = by_gen.get(service.generation, {}).get("time_mre")
+            if mre0 is None or mre1 is None:
+                print(f"  calibration by generation: {by_gen}")
+            else:
+                print(f"  windowed time-MRE: generation 0 = {mre0:.3f} "
+                      f"-> generation {service.generation} = {mre1:.3f} "
+                      f"({mre0 / max(mre1, 1e-12):.1f}x better)")
+
+    # the same queries now go through the multi-host fabric: N sharded
+    # gateway replicas behind a consistent-hash frontend, each owning a
+    # fingerprint slice of the trace store. The refit generation from
+    # above is broadcast fleet-wide (each replica applies it between
+    # ticks), so every replica answers from the freshest predictor.
+    print("== multi-host fabric (ClusterFrontend, 2 replicas) ==")
+    with ClusterFrontend(abacus, n_replicas=2,
+                         trace_root="artifacts/cluster_trace_store") as fleet:
+        if refitter.generation.number > 0:
+            fleet.publish_generation(refitter.generation)
+        for q in queries:
+            fp, owner = fleet.route(q.cfg)
+            print(f"  {q.cfg.name} b={q.batch} s={q.seq} -> {owner.name} "
+                  f"(fingerprint {fp[:8]}...)")
+        ests = fleet.predict_many(queries)
+        for e in ests:
+            print(f"  [{e['replica']}] {e['model']}: "
+                  f"{e['time_s']*1e3:.1f} ms, {e['memory_bytes']/GIB:.2f} GiB "
+                  f"(generation {e['generation']})")
+        s = fleet.stats()
+        print(f"  fleet: {s['fleet']['completed']} served across "
+              f"{s['replicas']} replicas, generations={s['generations']}")
 
 
 if __name__ == "__main__":

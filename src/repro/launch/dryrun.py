@@ -218,6 +218,10 @@ def main(argv=None) -> int:
                     help="persistent measured-cost observations ('' "
                          "disables): each predicted train cell's roofline "
                          "time / peak HBM feed the online-refit loop")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="gateway replicas: > 1 serves estimates from a "
+                         "fingerprint-sharded ClusterFrontend (per-replica "
+                         "trace/feedback slices under the store paths)")
     args = ap.parse_args(argv)
 
     service = server = None
@@ -227,15 +231,29 @@ def main(argv=None) -> int:
         from repro.serve.server import AbacusServer
         from repro.serve.trace_store import TraceStore
         if os.path.exists(args.predictor_path + ".json"):
-            store = TraceStore(args.trace_store) if args.trace_store else None
-            service = DNNAbacus.load(args.predictor_path).service(store=store)
-            feedback = (FeedbackStore(args.feedback_store)
-                        if args.feedback_store else None)
-            # estimates go through the micro-batched gateway, sharing its
-            # trace cache (and store) with any concurrent admission loop;
-            # observed cell costs land in the feedback store so a later
-            # refit pass (OnlineRefitter) can consume them.
-            server = AbacusServer(service, feedback=feedback).start()
+            if args.replicas > 1:
+                # the fleet path: estimates route by config fingerprint
+                # to N sharded gateways; each cell's observation lands
+                # in the owning replica's feedback slice, ready for a
+                # later federated refit pass.
+                from repro.serve.cluster import ClusterFrontend
+                server = ClusterFrontend(
+                    DNNAbacus.load(args.predictor_path),
+                    n_replicas=args.replicas,
+                    trace_root=args.trace_store or None,
+                    feedback_root=args.feedback_store or None).start()
+            else:
+                store = (TraceStore(args.trace_store)
+                         if args.trace_store else None)
+                service = DNNAbacus.load(
+                    args.predictor_path).service(store=store)
+                feedback = (FeedbackStore(args.feedback_store)
+                            if args.feedback_store else None)
+                # estimates go through the micro-batched gateway, sharing
+                # its trace cache (and store) with any concurrent admission
+                # loop; observed cell costs land in the feedback store so a
+                # later refit pass (OnlineRefitter) can consume them.
+                server = AbacusServer(service, feedback=feedback).start()
         else:
             print(f"[dryrun] no fitted predictor at {args.predictor_path}; "
                   "skipping estimates", file=sys.stderr)
@@ -264,7 +282,9 @@ def main(argv=None) -> int:
                             f.write(json.dumps(rec) + "\n")
     finally:
         if server is not None:
-            cal = server.calibration.metrics()
+            # works for both the single gateway and the cluster frontend
+            # (whose calibration is the count-weighted fleet merge)
+            cal = server.stats()["calibration"]
             if cal["count"]:
                 print(f"[dryrun] calibration over {cal['count']} cells: "
                       f"time_mre={cal['time_mre']:.3f} "

@@ -1,15 +1,21 @@
-"""Serving layer: prediction gateway + decode engine.
+"""Serving layer: prediction gateway + cluster fabric + decode engine.
 
 Import-light by design: the admission-gateway stack (``TraceStore``,
-``PredictionService``, ``AbacusServer``, ``AdmissionController``) and
-the online-refit loop (``FeedbackStore``, ``OnlineRefitter``) are pure
-numpy/stdlib and re-exported here; ``repro.serve.engine`` (the jax
-decode engine) is imported lazily by consumers that need it.
+``PredictionService``, ``AbacusServer``, ``AdmissionController``), the
+online-refit loop (``FeedbackStore``, ``OnlineRefitter``), and the
+multi-host fabric (``ClusterFrontend``, ``GatewayReplica``,
+``GenerationPublisher``) are pure numpy/stdlib and re-exported here;
+``repro.serve.engine`` (the jax decode engine) is imported lazily by
+consumers that need it. All durable maps share one persistence base,
+``repro.serve.kvstore.JsonFileStore``.
 """
 
 from repro.serve.admission import AdmissionController, Verdict
+from repro.serve.cluster import (ClusterFrontend, GatewayReplica,
+                                 GenerationPublisher, HashRing)
 from repro.serve.feedback_store import (CalibrationWindow, FeedbackStore,
                                         Observation)
+from repro.serve.kvstore import JsonFileStore, atomic_write_json
 from repro.serve.prediction_service import (PredictionService, Query,
                                             config_fingerprint)
 from repro.serve.refit import ModelGeneration, OnlineRefitter
@@ -19,4 +25,6 @@ from repro.serve.trace_store import TraceStore
 __all__ = ["AdmissionController", "Verdict", "PredictionService", "Query",
            "config_fingerprint", "AbacusServer", "TraceStore",
            "FeedbackStore", "Observation", "CalibrationWindow",
-           "OnlineRefitter", "ModelGeneration"]
+           "OnlineRefitter", "ModelGeneration", "JsonFileStore",
+           "atomic_write_json", "ClusterFrontend", "GatewayReplica",
+           "GenerationPublisher", "HashRing"]

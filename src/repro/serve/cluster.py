@@ -1,0 +1,413 @@
+"""Multi-host serving fabric: sharded gateway replicas behind one frontend.
+
+A single ``AbacusServer`` is one worker loop, one trace-cache budget,
+and one feedback stream — the datacenter setting the paper targets
+(admission control for whole fleets, §4.3) needs N of them. This module
+is the fleet seam:
+
+  * ``HashRing`` — consistent hashing over replica names. Points are
+    SHA-256 derived, so routing is a pure function of the key string:
+    stable across processes, hash seeds (``PYTHONHASHSEED``), and
+    restarts — the property that makes a replica's trace-store slice
+    *own* its keys.
+  * ``GatewayReplica`` — an ``AbacusServer`` over its own
+    ``PredictionService`` slice: a fingerprint-sharded ``TraceStore``
+    directory, its own ``FeedbackStore``, its own micro-batch worker.
+    Every estimate it resolves is stamped with ``replica`` so
+    (tick, generation) pairs are attributable fleet-wide.
+  * ``ClusterFrontend`` — routes each query to the replica that owns
+    its config fingerprint (computed ONCE here and forwarded via
+    ``Query.fp``), fans a wave of submissions out so every replica's
+    worker ticks concurrently on its partition, aggregates ``stats()``
+    fleet-wide, and broadcasts model generations.
+  * ``GenerationPublisher`` — the sink a central ``OnlineRefitter``
+    publishes through: every replica receives each ``ModelGeneration``
+    and applies it at its own tick boundary (``AbacusServer``'s
+    between-ticks guarantee), so no replica ever serves two
+    generations within one micro-batch. The refitter itself consumes a
+    *federated* merge of all per-replica ``FeedbackStore``s
+    (``OnlineRefitter(sources=...)``) and resolves feedback keys
+    against the owning shard's traces (``ShardedTraces``).
+
+Sharding by config fingerprint (not by full key) keeps every shape of
+one model on one replica, so that replica's trace/prediction caches see
+all the locality. The fleet-level win on one box is aggregate cache
+capacity — each replica only holds 1/N of the working set — and the
+seam is transport-agnostic: replicas are in-process here, but nothing
+in the frontend assumes it (the later RPC step swaps the replica list
+for remote stubs).
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import hashlib
+import os
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serve.feedback_store import FeedbackStore
+from repro.serve.prediction_service import (PredictionService, Query,
+                                            config_fingerprint, trace_query)
+from repro.serve.refit import OnlineRefitter
+from repro.serve.server import AbacusServer, ServerStats
+from repro.serve.trace_store import TraceStore
+
+
+class HashRing:
+    """Consistent-hash ring over replica names.
+
+    ``vnodes`` virtual points per replica smooth the key distribution;
+    all points are SHA-256 derived so ``route`` is a pure function of
+    its argument — two processes (or two hash seeds) always agree on
+    which replica owns a fingerprint. Adding or removing one replica
+    moves only ~1/N of the keyspace (the consistent-hashing property
+    the later resharding step relies on).
+    """
+
+    def __init__(self, names: Sequence[str], vnodes: int = 64):
+        if not names:
+            raise ValueError("HashRing needs at least one replica name")
+        if len(set(names)) != len(names):
+            raise ValueError("replica names must be unique")
+        self.vnodes = int(vnodes)
+        points: List[Tuple[int, str]] = []
+        for name in names:
+            for v in range(self.vnodes):
+                points.append((self._point(f"{name}#{v}"), name))
+        points.sort()
+        self._hashes = [h for h, _ in points]
+        self._names = [n for _, n in points]
+
+    @staticmethod
+    def _point(label: str) -> int:
+        # never the builtin hash(): it is salted per process
+        return int.from_bytes(
+            hashlib.sha256(label.encode()).digest()[:8], "big")
+
+    def route(self, key: str) -> str:
+        """Owning replica name for ``key`` (clockwise successor)."""
+        idx = bisect.bisect_right(self._hashes, self._point(str(key)))
+        return self._names[idx % len(self._names)]
+
+    def table(self, keys: Sequence[str]) -> Dict[str, str]:
+        """key -> owner for a batch of keys (debug / stability tests)."""
+        return {k: self.route(k) for k in keys}
+
+
+class GatewayReplica(AbacusServer):
+    """One shard of the fleet: an ``AbacusServer`` over its own slice.
+
+    The replica owns a ``PredictionService`` built around its
+    fingerprint-sharded ``TraceStore`` slice and (optionally) its own
+    ``FeedbackStore``; everything else — micro-batch worker, tick
+    boundaries, generation adoption — is inherited unchanged, which is
+    exactly the point: the fleet is N unmodified gateways plus routing.
+    """
+
+    def __init__(self, name: str, abacus, *, store: Optional[TraceStore] = None,
+                 feedback: Optional[FeedbackStore] = None,
+                 tracer=trace_query, service_kw: Optional[Dict] = None,
+                 **server_kw):
+        self.name = str(name)
+        service = PredictionService(abacus, store=store, tracer=tracer,
+                                    **dict(service_kw or {}))
+        super().__init__(service, feedback=feedback, **server_kw)
+        self.est_tags = {"replica": self.name}
+
+
+class GenerationPublisher:
+    """Broadcast ``ModelGeneration``s from a central refitter fleet-wide.
+
+    Registered as the refitter's sink; each replica applies the
+    generation at its own tick boundary (the ``AbacusServer``
+    guarantee), so a publish under load never mixes generations within
+    any replica's micro-batch. A failing replica is counted, never
+    allowed to swallow the generation for the others.
+    """
+
+    def __init__(self, replicas: Sequence[AbacusServer]):
+        self.replicas = list(replicas)
+        self.published = 0          # generations broadcast
+        self.deliveries = 0         # per-replica deliveries that succeeded
+        self.failures = 0           # per-replica deliveries that raised
+        self.last_generation: Optional[int] = None
+        self._lock = threading.Lock()
+
+    def publish_generation(self, gen) -> bool:
+        ok = 0
+        for replica in self.replicas:
+            try:
+                replica.publish_generation(gen)
+                ok += 1
+            except Exception:
+                with self._lock:
+                    self.failures += 1
+        with self._lock:
+            self.published += 1
+            self.deliveries += ok
+            self.last_generation = int(gen.number)
+        return ok == len(self.replicas)
+
+    def info(self) -> Dict:
+        with self._lock:
+            return {"replicas": len(self.replicas),
+                    "published": self.published,
+                    "deliveries": self.deliveries,
+                    "failures": self.failures,
+                    "last_generation": self.last_generation}
+
+
+class ShardedTraces:
+    """``.get(key)`` router over the fleet's trace slices.
+
+    The central refitter resolves feedback keys to traced records; in a
+    sharded fleet the record lives on the owning replica — its memory
+    cache first, then its persistent slice.
+    """
+
+    def __init__(self, frontend: "ClusterFrontend"):
+        self.frontend = frontend
+
+    def get(self, key):
+        replica = self.frontend.replica_for(key[0])
+        rec = replica.service.cached_record(key)
+        if rec is None and replica.service.store is not None:
+            rec = replica.service.store.get(key)
+        return rec
+
+
+def merge_calibration(metrics: Sequence[Dict]) -> Dict:
+    """Fleet-wide calibration from per-replica ``CalibrationWindow``s.
+
+    MRE/drift are per-completion means, so the fleet view is the
+    count-weighted mean of the replica windows (exact, not an
+    approximation, as long as every completion sits in exactly one
+    replica's window). ``by_generation`` merges the same way.
+    """
+    def _merge(rows: List[Dict]) -> Dict:
+        rows = [r for r in rows if r and r.get("count")]
+        n = sum(r["count"] for r in rows)
+        if not n:
+            return {"count": 0, "time_mre": None, "mem_mre": None,
+                    "time_drift": None, "mem_drift": None}
+        out = {"count": n}
+        for field in ("time_mre", "mem_mre", "time_drift", "mem_drift"):
+            out[field] = sum(r[field] * r["count"] for r in rows) / n
+        return out
+
+    fleet = _merge(list(metrics))
+    by_gen: Dict = {}
+    for m in metrics:
+        for gen, grp in (m or {}).get("by_generation", {}).items():
+            by_gen.setdefault(gen, []).append(grp)
+    fleet["by_generation"] = {
+        gen: _merge(grps)
+        for gen, grps in sorted(by_gen.items(),
+                                key=lambda e: (-1 if e[0] is None else e[0]))}
+    return fleet
+
+
+class ClusterFrontend:
+    """Consistent-hash router over N ``GatewayReplica``s.
+
+    Construction either builds a homogeneous fleet (``abacus`` +
+    ``n_replicas``, with per-replica ``TraceStore``/``FeedbackStore``
+    slices under ``trace_root``/``feedback_root``) or wraps
+    pre-built ``replicas``. The frontend mirrors the ``AbacusServer``
+    client API (``submit``/``submit_many``/``predict_one``/
+    ``predict_many``/``observe``/``stats``) so existing consumers —
+    ``AdmissionController``, ``dryrun --predict`` — can point at a
+    fleet unchanged.
+    """
+
+    def __init__(self, abacus=None, n_replicas: int = 4, *,
+                 trace_root: Optional[str] = None,
+                 feedback_root: Optional[str] = None,
+                 tracer=trace_query, vnodes: int = 64,
+                 service_kw: Optional[Dict] = None,
+                 replicas: Optional[Sequence[GatewayReplica]] = None,
+                 **server_kw):
+        if replicas is not None:
+            self.replicas = list(replicas)
+        else:
+            if abacus is None:
+                raise ValueError("pass a fitted abacus or explicit replicas")
+            self.replicas = []
+            for i in range(int(n_replicas)):
+                name = f"r{i}"
+                store = (TraceStore(os.path.join(trace_root, name))
+                         if trace_root else None)
+                feedback = (FeedbackStore(os.path.join(feedback_root, name))
+                            if feedback_root else None)
+                self.replicas.append(GatewayReplica(
+                    name, abacus, store=store, feedback=feedback,
+                    tracer=tracer, service_kw=service_kw, **server_kw))
+        if not self.replicas:
+            raise ValueError("ClusterFrontend needs at least one replica")
+        self._by_name = {r.name: r for r in self.replicas}
+        self.ring = HashRing([r.name for r in self.replicas], vnodes=vnodes)
+        # central (federated) feedback store: the refitter's input
+        self.feedback = (FeedbackStore(os.path.join(feedback_root, "central"))
+                         if feedback_root else None)
+        self.refitter: Optional[OnlineRefitter] = None
+        self.publisher: Optional[GenerationPublisher] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "ClusterFrontend":
+        for r in self.replicas:
+            r.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        for r in self.replicas:
+            r.stop(timeout)
+
+    def __enter__(self) -> "ClusterFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    @property
+    def running(self) -> bool:
+        return all(r.running for r in self.replicas)
+
+    # -- routing ------------------------------------------------------------
+    def replica_for(self, fingerprint: str) -> GatewayReplica:
+        return self._by_name[self.ring.route(fingerprint)]
+
+    def route(self, cfg) -> Tuple[str, GatewayReplica]:
+        """(fingerprint, owning replica) for one config."""
+        fp = config_fingerprint(cfg)
+        return fp, self.replica_for(fp)
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, cfg, batch: int, seq: int) -> Future:
+        """Route one query to its shard; fingerprint computed ONCE here."""
+        fp, replica = self.route(cfg)
+        return replica.submit(cfg, batch, seq, fp=fp)
+
+    def submit_many(self, queries: Sequence) -> List[Future]:
+        """Fan a wave out: one enqueue (-> one tick wake) per replica.
+
+        Futures come back in input order; each replica's worker
+        coalesces its whole partition into one concurrent micro-batch.
+        """
+        qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
+        qs = [q if q.fp is not None
+              else dataclasses.replace(q, fp=config_fingerprint(q.cfg))
+              for q in qs]
+        futs: List[Optional[Future]] = [None] * len(qs)
+        parts: Dict[str, Tuple[List[int], List[Query]]] = {}
+        for i, q in enumerate(qs):
+            idxs, part = parts.setdefault(self.ring.route(q.fp), ([], []))
+            idxs.append(i)
+            part.append(q)
+        for name, (idxs, part) in parts.items():
+            for i, fut in zip(idxs, self._by_name[name].submit_many(part)):
+                futs[i] = fut
+        return futs  # type: ignore[return-value]
+
+    def predict_one(self, cfg, batch: int, seq: int,
+                    timeout: Optional[float] = None) -> Dict:
+        return self.submit(cfg, batch, seq).result(timeout)
+
+    def predict_many(self, queries: Sequence,
+                     timeout: Optional[float] = None) -> List[Dict]:
+        return [f.result(timeout) for f in self.submit_many(queries)]
+
+    # -- feedback loop ------------------------------------------------------
+    def observe(self, cfg, batch: int, seq: int, time_s: float,
+                mem_bytes: float, **kw) -> None:
+        """Report a completion to the replica that owns the config.
+
+        The observation lands in the owning replica's ``FeedbackStore``
+        slice (and its calibration window); the central refitter pulls
+        it on its next federated sync. ``notify()`` keeps that sync
+        prompt without the frontend doing any merging inline.
+        """
+        fp = kw.pop("fp", None) or config_fingerprint(cfg)
+        self.replica_for(fp).observe(cfg, batch, seq, time_s, mem_bytes,
+                                     fp=fp, **kw)
+        if self.refitter is not None:
+            self.refitter.notify()
+
+    def sync_feedback(self) -> int:
+        """Merge every replica's feedback slice into the central store."""
+        if self.feedback is None:
+            raise ValueError("no central feedback store "
+                             "(construct with feedback_root=...)")
+        return sum(self.feedback.merge(r.feedback) for r in self.replicas
+                   if r.feedback is not None)
+
+    # -- model generations --------------------------------------------------
+    def publish_generation(self, gen) -> bool:
+        """Broadcast a generation to every replica (tick-boundary applied)."""
+        if self.publisher is None:
+            self.publisher = GenerationPublisher(self.replicas)
+        return self.publisher.publish_generation(gen)
+
+    def attach_refitter(self, refitter: OnlineRefitter) -> OnlineRefitter:
+        """Wire a central refitter into the fleet's publish path."""
+        self.publisher = self.publisher or GenerationPublisher(self.replicas)
+        refitter.add_sink(self.publisher)
+        self.refitter = refitter
+        return refitter
+
+    def make_refitter(self, seed_records=None, **kw) -> OnlineRefitter:
+        """Central ``OnlineRefitter`` over the fleet.
+
+        Consumes the federated merge of every replica's
+        ``FeedbackStore`` (``sources=``), resolves feedback keys
+        against the owning shard's traces, and publishes each new
+        generation to every replica via ``GenerationPublisher``.
+        """
+        if self.feedback is None:
+            raise ValueError("central refit needs feedback_root=...")
+        refitter = OnlineRefitter(
+            self.replicas[0].service, self.feedback,
+            seed_records=seed_records, traces=ShardedTraces(self),
+            sources=[r.feedback for r in self.replicas
+                     if r.feedback is not None], **kw)
+        return self.attach_refitter(refitter)
+
+    # -- introspection ------------------------------------------------------
+    def server_info(self) -> Dict:
+        per = {r.name: r.server_info() for r in self.replicas}
+        fleet = self._sum_counters(per)
+        fleet["queued"] = sum(p.get("queued", 0) for p in per.values())
+        return {"replicas": len(self.replicas), "running": self.running,
+                "fleet": fleet, "per_replica": per}
+
+    @staticmethod
+    def _sum_counters(per: Dict[str, Dict]) -> Dict:
+        counters = [f.name for f in dataclasses.fields(ServerStats)]
+        fleet = {c: sum(p.get(c, 0) for p in per.values()) for c in counters}
+        # max_batch is a high-water mark, not additive
+        fleet["max_batch"] = max((p.get("max_batch", 0)
+                                  for p in per.values()), default=0)
+        return fleet
+
+    def stats(self) -> Dict:
+        """Fleet-wide view: summed counters, merged calibration, refit."""
+        per = {r.name: r.stats() for r in self.replicas}
+        fleet = self._sum_counters(per)
+        out = {
+            "replicas": len(self.replicas),
+            "fleet": fleet,
+            "generations": sorted({r.service.generation
+                                   for r in self.replicas}),
+            "calibration": merge_calibration(
+                [p.get("calibration", {}) for p in per.values()]),
+            "per_replica": per,
+        }
+        if self.refitter is not None:
+            out["refit"] = self.refitter.info()
+        if self.publisher is not None:
+            out["publisher"] = self.publisher.info()
+        if self.feedback is not None:
+            out["feedback"] = self.feedback.info()
+        return out

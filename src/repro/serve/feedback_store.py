@@ -8,12 +8,13 @@ persists those outcomes and tracks calibration:
   * ``Observation`` — one finished job's measured ``(time_s, mem_bytes)``
     plus the prediction context (generation, timestamp, job id).
   * ``FeedbackStore`` — durable ``(config fingerprint, batch, seq) ->
-    {obs_id: Observation}`` map on disk, same atomic temp+``os.replace``
-    / versioned-schema / corrupt-files-are-skipped discipline as
-    ``TraceStore``. Observation ids are content-derived when the caller
-    supplies none, so re-reporting the same completion is idempotent and
-    ``merge`` (union by id) is order-independent — the property multi-
-    host aggregation will rely on.
+    {obs_id: Observation}`` map on disk. All persistence mechanics
+    (atomic writes, the shared schema version, corrupt-files-skipped
+    loads, order-independent ``merge``) live in the shared
+    ``repro.serve.kvstore.JsonFileStore`` base. Observation ids are
+    content-derived when the caller supplies none, so re-reporting the
+    same completion is idempotent and ``merge`` (union by id) is
+    order-independent — the property multi-host aggregation relies on.
   * ``CalibrationWindow`` — rolling predicted-vs-observed window with
     per-generation MRE and signed drift, surfaced via
     ``AbacusServer.stats()``.
@@ -37,9 +38,10 @@ import time
 from collections import deque
 from typing import Dict, Iterator, List, Optional, Tuple
 
-StoreKey = Tuple[str, int, int]  # (config fingerprint, batch, seq)
+from repro.serve.kvstore import SCHEMA_VERSION, JsonFileStore, StoreKey
 
-SCHEMA_VERSION = 1
+__all__ = ["Observation", "observation_id", "FeedbackStats", "FeedbackStore",
+           "CalibrationWindow", "StoreKey", "SCHEMA_VERSION"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,65 +91,55 @@ class FeedbackStats:
         return dataclasses.asdict(self)
 
 
-class FeedbackStore:
+class FeedbackStore(JsonFileStore):
     """Durable measured-cost observations, one JSON file per key."""
 
+    FILE_PREFIX = "fb_"
+    VALUE_FIELD = "obs"
+
     def __init__(self, root: str):
-        self.root = str(root)
-        os.makedirs(self.root, exist_ok=True)
+        super().__init__(root)
         self.stats = FeedbackStats()
-        # reentrant: read-modify-write holds it across _load_payload,
-        # which may itself take it to count a corrupt file
-        self._lock = threading.RLock()
         # observation count is cached: threshold checks / stats polls run
         # on every observe() and must not re-scan the whole directory.
         # Seeded by one startup scan; add/merge/clear keep it current for
         # THIS process (a concurrent process's writes surface on rescan).
         self._total: Optional[int] = None
 
-    # -- key/file mapping ---------------------------------------------------
-    @staticmethod
-    def filename(key: StoreKey) -> str:
-        fp, batch, seq = key
-        return f"fb_{fp}_b{int(batch)}_s{int(seq)}.json"
+    # -- JsonFileStore hooks ------------------------------------------------
+    def _check_raw(self, raw):
+        if not isinstance(raw, dict):
+            raise ValueError("missing observation map")
+        return raw
 
-    def path_for(self, key: StoreKey) -> str:
-        return os.path.join(self.root, self.filename(key))
+    def _merge_raw(self, mine, theirs):
+        """Union by observation id; malformed foreign entries skipped."""
+        existing = dict(mine or {})
+        fresh = {}
+        for oid, d in theirs.items():
+            if oid in existing:
+                continue
+            try:
+                Observation.from_dict(d)
+            except (KeyError, TypeError, ValueError):
+                self._note_corrupt()
+                continue
+            fresh[oid] = d
+        if not fresh:
+            return existing, 0
+        existing.update(fresh)
+        return existing, len(fresh)
 
-    def _files(self) -> List[str]:
-        try:
-            names = os.listdir(self.root)
-        except OSError:
-            return []
-        return sorted(n for n in names
-                      if n.startswith("fb_") and n.endswith(".json"))
+    def _note_corrupt(self) -> None:
+        with self._lock:
+            self.stats.corrupt += 1
+            self._total = None  # count is suspect: rescan on next total()
 
-    def _load_payload(self, path: str) -> Optional[Dict]:
-        """Parsed payload for one key file, or None (corrupt counted)."""
-        if not os.path.exists(path):
-            return None
-        try:
-            with open(path) as f:
-                payload = json.load(f)
-            if payload.get("version") != SCHEMA_VERSION:
-                raise ValueError(f"schema version {payload.get('version')!r}")
-            fp, batch, seq = payload["key"]
-            payload["key"] = (str(fp), int(batch), int(seq))
-            if not isinstance(payload.get("obs"), dict):
-                raise ValueError("missing observation map")
-            return payload
-        except (OSError, ValueError, KeyError, TypeError):
-            with self._lock:
-                self.stats.corrupt += 1
-                self._total = None  # count is suspect: rescan on next total()
-            return None
-
-    def _write_payload(self, key: StoreKey, obs: Dict[str, Dict]) -> None:
-        from repro.serve.trace_store import atomic_write_json
-
-        payload = {"version": SCHEMA_VERSION,
-                   "key": [key[0], int(key[1]), int(key[2])], "obs": obs}
-        atomic_write_json(self.root, self.path_for(key), payload)
+    def _on_merge(self, key: StoreKey, n_new: int) -> None:
+        with self._lock:
+            self.stats.merged += n_new
+            if self._total is not None:
+                self._total += n_new
 
     # -- writes -------------------------------------------------------------
     def add(self, key: StoreKey, time_s: float, mem_bytes: float,
@@ -164,72 +156,40 @@ class FeedbackStore:
                           job_id=str(job_id))
         oid = observation_id(key, obs)
         with self._lock:
-            payload = self._load_payload(self.path_for(key))
-            existing = payload["obs"] if payload is not None else {}
+            existing = self.get_raw(key) or {}
             if oid in existing:
                 self.stats.duplicates += 1
                 return oid
             existing[oid] = obs.as_dict()
-            self._write_payload(key, existing)
+            self.put_raw(key, existing)
             self.stats.adds += 1
             if self._total is not None:
                 self._total += 1
         return oid
 
-    def merge(self, other: "FeedbackStore") -> int:
-        """Union another store's observations into this one (by id).
-
-        Union-by-content-id makes the merge commutative and idempotent:
-        ``a.merge(b)`` then ``a.merge(c)`` yields the same contents as
-        any other order — the property multi-host aggregation needs.
-        Returns how many observations were new to this store.
-        """
-        imported = 0
-        for key, obs_map in other.items():
-            with self._lock:
-                payload = self._load_payload(self.path_for(key))
-                existing = payload["obs"] if payload is not None else {}
-                fresh = {oid: o.as_dict() for oid, o in obs_map.items()
-                         if oid not in existing}
-                if not fresh:
-                    continue
-                existing.update(fresh)
-                self._write_payload(key, existing)
-                self.stats.merged += len(fresh)
-                if self._total is not None:
-                    self._total += len(fresh)
-            imported += len(fresh)
-        return imported
-
     # -- reads --------------------------------------------------------------
+    def _validated(self, raw: Dict) -> Dict[str, Observation]:
+        out = {}
+        for oid, d in raw.items():
+            try:
+                out[oid] = Observation.from_dict(d)
+            except (KeyError, TypeError, ValueError):
+                self._note_corrupt()
+        return out
+
     def get(self, key: StoreKey) -> List[Observation]:
         """Observations for ``key`` in deterministic (ts, id) order."""
-        payload = self._load_payload(self.path_for(key))
-        if payload is None:
+        raw = self.get_raw(key)
+        if raw is None:
             return []
-        out = []
-        for oid, d in payload["obs"].items():
-            try:
-                out.append((oid, Observation.from_dict(d)))
-            except (KeyError, TypeError, ValueError):
-                with self._lock:
-                    self.stats.corrupt += 1
-        return [o for _, o in sorted(out, key=lambda e: (e[1].ts, e[0]))]
+        obs = self._validated(raw)
+        return [o for _, o in sorted(obs.items(),
+                                     key=lambda e: (e[1].ts, e[0]))]
 
     def items(self) -> Iterator[Tuple[StoreKey, Dict[str, Observation]]]:
         """(key, {obs_id: Observation}) for every loadable key file."""
-        for name in self._files():
-            payload = self._load_payload(os.path.join(self.root, name))
-            if payload is None:
-                continue
-            obs = {}
-            for oid, d in payload["obs"].items():
-                try:
-                    obs[oid] = Observation.from_dict(d)
-                except (KeyError, TypeError, ValueError):
-                    with self._lock:
-                        self.stats.corrupt += 1
-            yield payload["key"], obs
+        for key, raw in self.iter_raw():
+            yield key, self._validated(raw)
 
     def grouped(self) -> Dict[StoreKey, List[Observation]]:
         """key -> observations, each list in deterministic (ts, id) order."""
@@ -269,13 +229,7 @@ class FeedbackStore:
         return min(ts) if ts else None
 
     def clear(self) -> int:
-        n = 0
-        for name in self._files():
-            try:
-                os.unlink(os.path.join(self.root, name))
-                n += 1
-            except OSError:
-                pass
+        n = super().clear()
         with self._lock:
             self._total = 0
         return n
@@ -284,12 +238,14 @@ class FeedbackStore:
                 max_per_key: Optional[int] = None) -> Dict[str, int]:
         """Prune the store: drop stale observations, cap per-key history.
 
-        A long-lived deployment (e.g. every ``dryrun --predict`` sweep
-        appending here) grows without bound otherwise — and refit
-        targets only use each key's newest window anyway. Observations
-        older than ``max_age_s`` are dropped; each key keeps at most its
-        ``max_per_key`` newest (by timestamp); unparseable files and
-        keys left empty are deleted. Returns removal counts.
+        Finer-grained than the base file-level compact: observations
+        older than ``max_age_s`` are dropped *within* each key file,
+        each key keeps at most its ``max_per_key`` newest (by
+        timestamp; the newest observation per key always survives),
+        unparseable files and keys left empty are deleted. A long-lived
+        deployment (e.g. every ``dryrun --predict`` sweep appending
+        here) grows without bound otherwise — and refit targets only
+        use each key's newest window anyway. Returns removal counts.
         """
         now = time.time()
         removed = {"expired": 0, "over_cap": 0, "corrupt_files": 0}
@@ -304,7 +260,7 @@ class FeedbackStore:
                     except OSError:
                         pass
                     continue
-                obs = payload["obs"]
+                obs = payload[self.VALUE_FIELD]
                 keep = dict(obs)
                 if max_age_s is not None:
                     fresh = {oid: d for oid, d in keep.items()
@@ -320,7 +276,7 @@ class FeedbackStore:
                 if len(keep) == len(obs):
                     continue
                 if keep:
-                    self._write_payload(payload["key"], keep)
+                    self.put_raw(payload["key"], keep)
                 else:
                     try:
                         os.unlink(path)

@@ -1,0 +1,277 @@
+"""Shared JSON-file store base for every durable map in ``repro.serve``.
+
+``TraceStore`` (PR 2) and ``FeedbackStore`` (PR 3) grew the same
+persistence discipline independently: one JSON file per
+``(config fingerprint, batch, seq)`` key, a schema version stamped into
+every payload, corrupt/foreign files skipped (counted, never fatal), and
+same-directory temp + ``os.replace`` writes so concurrent readers never
+observe a torn record. They also diverged in the details — separate
+schema-version constants, different key-vs-filename checks, different
+corrupt-counting paths — exactly the drift a shared base exists to stop.
+
+``JsonFileStore`` owns the whole discipline in one place:
+
+  * **key <-> file mapping** — ``<PREFIX><fp>_b<batch>_s<seq>.json``.
+  * **atomic writes** — ``atomic_write_json`` (temp + ``os.replace``).
+  * **versioned schema** — ONE ``SCHEMA_VERSION`` shared by every
+    subclass; loads that carry a foreign version, fail to parse, echo a
+    key that disagrees with their filename, or fail the subclass's
+    value check are skipped and counted via ``_note_corrupt`` — the
+    same semantics on every read path (get / keys / compact / merge).
+  * **``compact``** — stale-schema GC + mtime TTL + entry cap (newest
+    files survive); subclasses with intra-file structure (feedback
+    observations) override with finer-grained pruning.
+  * **``merge``** — order-independent union: the subclass's
+    ``_merge_raw`` must be commutative and idempotent, which makes any
+    sequence of cross-host merges converge to one fixed point — the
+    primitive the multi-host fabric (``repro.serve.cluster``) is built
+    on.
+
+Subclasses define the value: ``VALUE_FIELD`` names the payload slot
+(kept distinct per store so pre-refactor files still load),
+``_check_raw`` validates a loaded value, ``_servable`` optionally
+deep-validates at compact time, and ``_merge_raw`` unions two values.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
+
+StoreKey = Tuple[str, int, int]  # (config fingerprint, batch, seq)
+
+# ONE schema generation for every JsonFileStore subclass. Bumping this
+# invalidates (skips, then compacts away) every on-disk record of every
+# store at once — traces and feedback can never drift onto different
+# version ladders again.
+SCHEMA_VERSION = 1
+
+
+def atomic_write_json(root: str, path: str, payload: Dict) -> None:
+    """Same-directory temp file + ``os.replace``: concurrent readers see
+    the old file or the new one, never a torn record. Shared by every
+    durable store in ``repro.serve`` (traces, feedback) so the write
+    discipline is fixed in exactly one place."""
+    fd, tmp = tempfile.mkstemp(dir=root, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)  # atomic on POSIX
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+class JsonFileStore:
+    """Durable ``StoreKey -> value`` map: one JSON file per key."""
+
+    FILE_PREFIX = ""        # e.g. "fb_" keeps feedback files greppable
+    VALUE_FIELD = "value"   # payload slot the subclass's value lives in
+    schema_version = SCHEMA_VERSION  # shared: see module docstring
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        # reentrant: read-modify-write paths hold it across loads that
+        # may themselves take it to count a corrupt file
+        self._lock = threading.RLock()
+
+    # -- key/file mapping ---------------------------------------------------
+    def filename(self, key: StoreKey) -> str:
+        fp, batch, seq = key
+        return f"{self.FILE_PREFIX}{fp}_b{int(batch)}_s{int(seq)}.json"
+
+    def path_for(self, key: StoreKey) -> str:
+        return os.path.join(self.root, self.filename(key))
+
+    @staticmethod
+    def _key_from_payload(payload: Dict) -> StoreKey:
+        fp, batch, seq = payload["key"]
+        return (str(fp), int(batch), int(seq))
+
+    def _files(self) -> List[str]:
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return []
+        return sorted(n for n in names
+                      if n.startswith(self.FILE_PREFIX)
+                      and n.endswith(".json"))
+
+    # -- subclass hooks -----------------------------------------------------
+    def _check_raw(self, raw):
+        """Validate a loaded value; raise to mark the file corrupt."""
+        return raw
+
+    def _servable(self, raw) -> None:
+        """Deep validation at compact time (e.g. the record must load).
+
+        A file that parses but whose value can never be served would be
+        re-skipped by every read forever — compaction drops it."""
+
+    def _merge_raw(self, mine: Optional[Dict], theirs: Dict):
+        """Union two values -> ``(merged, n_new)``.
+
+        MUST be commutative and idempotent: any merge order across any
+        number of stores converges to the same contents."""
+        raise NotImplementedError
+
+    def _note_corrupt(self) -> None:
+        """Called once per skipped file/value, on every read path."""
+
+    def _on_merge(self, key: StoreKey, n_new: int) -> None:
+        """Called after ``merge`` imported ``n_new`` units for ``key``."""
+
+    # -- load / save --------------------------------------------------------
+    def _load_payload(self, path: str) -> Optional[Dict]:
+        """Parsed, validated payload for one key file, or None.
+
+        Skips (counting via ``_note_corrupt``) anything unparseable, on
+        a foreign schema version, carrying a malformed value, or whose
+        embedded key does not name the very file it was found under —
+        the SAME semantics on every read path (get / keys / iter_raw /
+        merge / compact), so a renamed or misplaced file is dead
+        everywhere, not just to ``get``, and ``compact`` reclaims it.
+        """
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("version") != self.schema_version:
+                raise ValueError(f"schema version {payload.get('version')!r}")
+            payload["key"] = self._key_from_payload(payload)
+            if self.filename(payload["key"]) != os.path.basename(path):
+                raise ValueError("stored key disagrees with filename")
+            payload[self.VALUE_FIELD] = self._check_raw(
+                payload.get(self.VALUE_FIELD))
+            return payload
+        except (OSError, ValueError, KeyError, TypeError):
+            # json.JSONDecodeError is a ValueError; malformed values
+            # raise KeyError/TypeError. All are one skipped file.
+            self._note_corrupt()
+            return None
+
+    def get_raw(self, key: StoreKey) -> Optional[Dict]:
+        """Validated value for ``key``, or None (corrupt counted)."""
+        payload = self._load_payload(self.path_for(key))
+        return None if payload is None else payload[self.VALUE_FIELD]
+
+    def put_raw(self, key: StoreKey, raw) -> str:
+        """Atomically persist ``raw`` under ``key``; returns the path."""
+        path = self.path_for(key)
+        payload = {"version": self.schema_version,
+                   "key": [key[0], int(key[1]), int(key[2])],
+                   self.VALUE_FIELD: raw}
+        atomic_write_json(self.root, path, payload)
+        return path
+
+    # -- inventory ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._files())
+
+    def keys(self) -> Iterator[StoreKey]:
+        """Keys of every loadable file (corrupted files skipped)."""
+        for key, _ in self.iter_raw():
+            yield key
+
+    def iter_raw(self) -> Iterator[Tuple[StoreKey, Dict]]:
+        """(key, value) for every loadable key file."""
+        for name in self._files():
+            payload = self._load_payload(os.path.join(self.root, name))
+            if payload is not None:
+                yield payload["key"], payload[self.VALUE_FIELD]
+
+    def raw_snapshot(self) -> Dict[StoreKey, Dict]:
+        """Canonical content view (equality checks across stores)."""
+        return dict(self.iter_raw())
+
+    def clear(self) -> int:
+        """Delete every stored file; returns how many were removed."""
+        n = 0
+        for name in self._files():
+            try:
+                os.unlink(os.path.join(self.root, name))
+                n += 1
+            except OSError:
+                pass
+        return n
+
+    # -- merge --------------------------------------------------------------
+    def merge(self, other: "JsonFileStore") -> int:
+        """Union another store's contents into this one.
+
+        Delegates the per-key union to ``_merge_raw``; because that hook
+        is commutative and idempotent, ``a.merge(b); a.merge(c)`` yields
+        the same contents in any order — the property federated
+        multi-host aggregation relies on. Returns how many units
+        (records / observations) were new to this store.
+        """
+        imported = 0
+        for key, theirs in other.iter_raw():
+            with self._lock:
+                mine = self.get_raw(key)
+                merged, n_new = self._merge_raw(mine, theirs)
+                if n_new:
+                    self.put_raw(key, merged)
+                    self._on_merge(key, n_new)
+            imported += n_new
+        return imported
+
+    # -- compaction ---------------------------------------------------------
+    def compact(self, max_age_s: Optional[float] = None,
+                max_entries: Optional[int] = None) -> Dict[str, int]:
+        """Garbage-collect the store: stale schemas, TTL, entry cap.
+
+        Drops (1) files carrying a foreign schema generation, that no
+        longer parse, or whose value fails ``_servable`` — they can
+        never be served, only re-skipped on every read — (2) files
+        older than ``max_age_s`` (by mtime; the TTL), and (3) the
+        oldest files beyond ``max_entries`` (newest survive). Deletion
+        is plain ``unlink``: a concurrent reader either opened the file
+        first (and reads the old record) or misses — never a torn read.
+        Returns removal counts by reason plus the surviving count.
+        """
+        now = time.time()
+        valid: List[tuple] = []  # (mtime, name) of loadable current-schema
+        removed = {"stale_schema": 0, "expired": 0, "over_cap": 0}
+
+        def _unlink(name: str, reason: str) -> None:
+            try:
+                os.unlink(os.path.join(self.root, name))
+                removed[reason] += 1
+            except OSError:
+                pass  # a concurrent compact/clear got there first
+
+        for name in self._files():
+            path = os.path.join(self.root, name)
+            try:
+                mtime = os.path.getmtime(path)
+            except OSError:
+                continue  # vanished under us: nothing to do
+            payload = self._load_payload(path)
+            if payload is None:
+                _unlink(name, "stale_schema")
+                continue
+            try:
+                self._servable(payload[self.VALUE_FIELD])
+            except Exception:
+                _unlink(name, "stale_schema")
+                continue
+            if max_age_s is not None and now - mtime > max_age_s:
+                _unlink(name, "expired")
+                continue
+            valid.append((mtime, name))
+        if max_entries is not None and len(valid) > max_entries:
+            valid.sort()  # oldest first
+            doomed, valid = valid[:len(valid) - max_entries], \
+                valid[len(valid) - max_entries:]
+            for _, name in doomed:
+                _unlink(name, "over_cap")
+        return {**removed, "removed": sum(removed.values()),
+                "kept": len(valid)}

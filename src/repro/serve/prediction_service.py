@@ -42,10 +42,23 @@ CacheKey = Tuple[str, int, int]
 
 @dataclasses.dataclass(frozen=True)
 class Query:
-    """One admission-control question: cost of (config, batch, seq)."""
+    """One admission-control question: cost of (config, batch, seq).
+
+    ``fp`` optionally carries a precomputed config fingerprint: the
+    cluster frontend fingerprints each query once to route it, and the
+    owning replica reuses that key instead of re-hashing the config
+    (the fingerprint is the hot path's dominant per-query cost).
+    """
     cfg: Any  # ModelConfig
     batch: int
     seq: int
+    fp: Optional[str] = None  # precomputed config fingerprint
+
+    def key(self) -> Optional[CacheKey]:
+        """Cache key when the fingerprint was precomputed, else None."""
+        if self.fp is None:
+            return None
+        return (self.fp, int(self.batch), int(self.seq))
 
 
 def _canonical(value):
@@ -361,7 +374,7 @@ class PredictionService:
         qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
         if not qs:
             return []
-        keys = [self.cache_key(q.cfg, q.batch, q.seq) for q in qs]
+        keys = [q.key() or self.cache_key(q.cfg, q.batch, q.seq) for q in qs]
         recs = [self._record_for_key(k, q.cfg, q.batch, q.seq)
                 for k, q in zip(keys, qs)]
         abacus, gen = self.snapshot()

@@ -82,11 +82,23 @@ class OnlineRefitter:
                  max_staleness_s: Optional[float] = None,
                  replace_seed: bool = True, feedback_repeat: int = 1,
                  min_train_records: int = 4, val_frac: float = 0.2,
-                 obs_window: int = 32):
+                 obs_window: int = 32,
+                 sources: Optional[Sequence[FeedbackStore]] = None):
         self.service = service
         self.feedback = feedback
         self.seed_records = list(seed_records or [])
         self.traces = traces  # optional extra source with .get(key)
+        # federated inputs: per-replica FeedbackStores whose contents are
+        # merged into `feedback` before every threshold check, so one
+        # central refitter consumes the whole fleet's observations.
+        # merge() is commutative+idempotent, so repeated syncs converge.
+        self.sources = list(sources or [])
+        self.synced = 0  # observations imported from sources so far
+        # sum of source totals at the last sync: a full federated merge
+        # re-parses every key file of every source, so routine
+        # should_refit() polls skip it unless some source's O(1) cached
+        # count moved since the last sync (see sync_sources)
+        self._source_mark: Optional[int] = None
         self.min_observations = int(min_observations)
         self.max_staleness_s = max_staleness_s
         self.replace_seed = bool(replace_seed)
@@ -158,10 +170,51 @@ class OnlineRefitter:
             self._stuck_at = None  # fresh signal: a retry may now progress
             self._cond.notify_all()
 
+    def sync_sources(self, force: bool = False) -> int:
+        """Federated merge: pull every source store into ``feedback``.
+
+        Returns how many observations were new to the central store.
+        Safe to call at any time from any thread (merge is idempotent);
+        called automatically before each ``should_refit`` evaluation so
+        fleet-wide feedback counts toward the refit thresholds.
+
+        The merge itself re-parses every key file of every source, so
+        it is gated on a cheap change detector: the sum of the sources'
+        O(1) cached ``total()``s. Sources are the fleet's *in-process*
+        replica slices (their counters track every local add), so an
+        unchanged sum means nothing new to pull and the scan is
+        skipped; ``force=True`` (the explicit ``refit_now(force=True)``
+        path) always scans, which also picks up writes landed by other
+        processes.
+        """
+        try:
+            mark = sum(src.total() for src in self.sources)
+        except Exception:
+            mark = None  # a source can't even count: scan to find out
+        with self._cond:
+            if not force and mark is not None and mark == self._source_mark:
+                return 0
+        imported = 0
+        for src in self.sources:
+            try:
+                imported += self.feedback.merge(src)
+            except Exception:
+                # a torn/unreadable source (e.g. a remote replica's
+                # store mid-copy) must not take down the refit loop;
+                # merge is retried on the next sync anyway.
+                continue
+        with self._cond:
+            self._source_mark = mark
+        if imported:
+            self.synced += imported
+        return imported
+
     def fresh_observations(self) -> int:
         return max(0, self.feedback.total() - self._consumed)
 
     def should_refit(self) -> bool:
+        if self.sources:
+            self.sync_sources()
         fresh = self.fresh_observations()
         if fresh <= 0:
             return False
@@ -230,6 +283,11 @@ class OnlineRefitter:
         at least one resolvable feedback record).
         """
         with self._refit_lock:
+            if force and self.sources:
+                # should_refit (the guarded sync) is skipped on this
+                # path: scan unconditionally so an explicit force also
+                # sees observations landed by other processes
+                self.sync_sources(force=True)
             if not force and not self.should_refit():
                 return None
             records, consumed, unresolved = self.training_records()
@@ -314,6 +372,8 @@ class OnlineRefitter:
                 "refits": self.refits,
                 "refit_failures": self.refit_failures,
                 "publish_failures": self.publish_failures,
+                "sources": len(self.sources),
+                "synced": self.synced,
                 "last_refit_s": self.last_refit_s,
                 "fresh_observations": self.fresh_observations(),
                 "min_observations": self.min_observations,

@@ -81,6 +81,10 @@ class AbacusServer:
         self.service = service
         self.max_batch = int(max_batch)
         self.trace_workers = int(trace_workers)
+        # merged into every estimate this server resolves: a cluster
+        # replica stamps {"replica": name} so fleet-level tests and
+        # clients can attribute (tick, generation) pairs per replica.
+        self.est_tags: Dict[str, object] = {}
         self.stats = ServerStats()
         self.stats._full_stats = self._stats_dict  # server.stats() works too
         # feedback loop (optional): measured completions land in the
@@ -160,10 +164,15 @@ class AbacusServer:
         return self._running
 
     # -- client API ---------------------------------------------------------
-    def submit(self, cfg, batch: int, seq: int) -> Future:
-        """Enqueue one admission query; resolves to the estimate dict."""
+    def submit(self, cfg, batch: int, seq: int,
+               fp: Optional[str] = None) -> Future:
+        """Enqueue one admission query; resolves to the estimate dict.
+
+        ``fp`` optionally carries the config fingerprint a router
+        already computed, sparing this server's worker the re-hash.
+        """
         fut: Future = Future()
-        q = Query(cfg, int(batch), int(seq))
+        q = Query(cfg, int(batch), int(seq), fp=fp)
         with self._cond:
             if not self._running:
                 raise RuntimeError("AbacusServer is not running "
@@ -229,7 +238,8 @@ class AbacusServer:
     def observe(self, cfg, batch: int, seq: int, time_s: float,
                 mem_bytes: float, *, predicted_time_s: Optional[float] = None,
                 predicted_mem_bytes: Optional[float] = None,
-                generation: Optional[int] = None, job_id: str = "") -> None:
+                generation: Optional[int] = None, job_id: str = "",
+                fp: Optional[str] = None) -> None:
         """Report one finished job's measured cost.
 
         Feeds the rolling calibration window (when the prediction that
@@ -247,7 +257,8 @@ class AbacusServer:
                                      predicted_mem_bytes, mem_bytes,
                                      generation)
         if self.feedback is not None:
-            key = self.service.cache_key(cfg, batch, seq)
+            key = ((fp, int(batch), int(seq)) if fp is not None
+                   else self.service.cache_key(cfg, batch, seq))
             self.feedback.add(key, time_s, mem_bytes,
                               generation=generation, job_id=job_id)
         if self.refitter is not None:
@@ -307,7 +318,7 @@ class AbacusServer:
         key_of = []
         for idx, (q, _) in enumerate(batch):
             try:
-                key = svc.cache_key(q.cfg, q.batch, q.seq)
+                key = q.key() or svc.cache_key(q.cfg, q.batch, q.seq)
             except Exception as e:  # unfingerprintable cfg: fail that query
                 key = ("__badkey__", idx)
                 err_of[key] = e
@@ -344,6 +355,7 @@ class AbacusServer:
                 self.stats.completed += 1
                 est = svc._estimate(rec_of[key], t, m, generation=generation)
                 est["tick"] = tick
+                est.update(self.est_tags)
                 fut.set_result(est)
             else:
                 self.stats.failed += 1

@@ -8,207 +8,103 @@ has ever answered. ``TraceStore`` persists traced ``ProfileRecord``s
 fresh process warm-starts from prior traces: load-on-miss, atomic
 write-on-trace.
 
-Layout: one JSON file per key under ``root/``, named
-``<fingerprint>_b<batch>_s<seq>.json``. Each file carries a schema
-version and echoes its own key; loads that fail to parse, carry a
-foreign schema version, or disagree with their filename's key are
-*skipped* (counted, never fatal) — a corrupted or stale file costs one
-re-trace, not a crash. Writes go through a same-directory temp file and
-``os.replace`` so concurrent processes never observe a torn record.
+All persistence mechanics — one JSON file per key, versioned schema,
+corrupt/foreign files skipped (counted, never fatal), temp +
+``os.replace`` writes, TTL/entry-cap ``compact``, order-independent
+``merge`` — live in the shared ``repro.serve.kvstore.JsonFileStore``
+base; this module only defines what a *trace* value is.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
-import os
-import tempfile
-import threading
-import time
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.core.features import ProfileRecord, record_from_json, record_to_json
+from repro.serve.kvstore import (SCHEMA_VERSION, JsonFileStore, StoreKey,
+                                 atomic_write_json)
 
-StoreKey = Tuple[str, int, int]  # (config fingerprint, batch, seq)
-
-SCHEMA_VERSION = 1
-
-
-def atomic_write_json(root: str, path: str, payload: Dict) -> None:
-    """Same-directory temp file + ``os.replace``: concurrent readers see
-    the old file or the new one, never a torn record. Shared by every
-    durable store in ``repro.serve`` (traces, feedback) so the write
-    discipline is fixed in exactly one place."""
-    fd, tmp = tempfile.mkstemp(dir=root, suffix=".tmp")
-    try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f)
-        os.replace(tmp, path)  # atomic on POSIX
-    except BaseException:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-        raise
+__all__ = ["TraceStore", "StoreStats", "StoreKey", "SCHEMA_VERSION",
+           "atomic_write_json"]
 
 
 @dataclasses.dataclass
 class StoreStats:
     hits: int = 0        # get() served a record from disk
-    misses: int = 0      # get() found no file
+    misses: int = 0      # get() found no (servable) file
     writes: int = 0      # put() persisted a record
     corrupt: int = 0     # files skipped: unparseable / wrong version / bad key
+    merged: int = 0      # records imported by merge()
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
 
 
-class TraceStore:
+class TraceStore(JsonFileStore):
     """Durable ``(fingerprint, batch, seq) -> ProfileRecord`` map on disk."""
 
+    VALUE_FIELD = "record"
+
     def __init__(self, root: str):
-        self.root = str(root)
-        os.makedirs(self.root, exist_ok=True)
+        super().__init__(root)
         self.stats = StoreStats()
-        self._lock = threading.Lock()
 
-    # -- key/file mapping ---------------------------------------------------
-    @staticmethod
-    def filename(key: StoreKey) -> str:
-        fp, batch, seq = key
-        return f"{fp}_b{int(batch)}_s{int(seq)}.json"
+    # -- JsonFileStore hooks ------------------------------------------------
+    def _check_raw(self, raw):
+        if not isinstance(raw, dict):
+            raise ValueError("missing record payload")
+        return raw
 
-    def path_for(self, key: StoreKey) -> str:
-        return os.path.join(self.root, self.filename(key))
+    def _servable(self, raw) -> None:
+        record_from_json(raw)  # a record that cannot load is dead weight
 
-    @staticmethod
-    def _key_from_payload(payload: Dict) -> StoreKey:
-        fp, batch, seq = payload["key"]
-        return (str(fp), int(batch), int(seq))
+    def _merge_raw(self, mine, theirs):
+        """Deterministic record union: identical contents dedupe; two
+        hosts that (exceptionally) traced different records for one key
+        converge on the same winner regardless of merge order, chosen
+        by canonical-JSON ordering — never by who merged first."""
+        if mine is None:
+            return theirs, 1
+        if mine == theirs:
+            return mine, 0
+        keep_mine = (json.dumps(mine, sort_keys=True)
+                     >= json.dumps(theirs, sort_keys=True))
+        return (mine, 0) if keep_mine else (theirs, 1)
+
+    def _note_corrupt(self) -> None:
+        with self._lock:
+            self.stats.corrupt += 1
+
+    def _on_merge(self, key: StoreKey, n_new: int) -> None:
+        with self._lock:
+            self.stats.merged += n_new
 
     # -- load / save --------------------------------------------------------
     def get(self, key: StoreKey) -> Optional[ProfileRecord]:
         """Record for ``key``, or None. Corrupted files are skipped."""
-        path = self.path_for(key)
-        if not os.path.exists(path):
-            with self._lock:
-                self.stats.misses += 1
-            return None
-        try:
-            with open(path) as f:
-                payload = json.load(f)
-            if payload.get("version") != SCHEMA_VERSION:
-                raise ValueError(f"schema version {payload.get('version')!r}")
-            if self._key_from_payload(payload) != key:
-                raise ValueError("stored key disagrees with filename")
-            rec = record_from_json(payload["record"])
-        except (OSError, ValueError, KeyError, TypeError) as e:
-            # json.JSONDecodeError is a ValueError; a bad record dict raises
-            # KeyError/TypeError in record_from_json. All are one re-trace.
-            with self._lock:
-                self.stats.corrupt += 1
-                self.stats.misses += 1
-            self._last_error = f"{type(e).__name__}: {e}"
-            return None
+        raw = self.get_raw(key)  # corrupt counted by the shared load path
+        if raw is not None:
+            try:
+                rec = record_from_json(raw)
+            except (ValueError, KeyError, TypeError):
+                self._note_corrupt()
+                rec = None
+            if rec is not None:
+                with self._lock:
+                    self.stats.hits += 1
+                return rec
         with self._lock:
-            self.stats.hits += 1
-        return rec
+            self.stats.misses += 1
+        return None
 
     def put(self, key: StoreKey, rec: ProfileRecord) -> str:
         """Atomically persist ``rec`` under ``key``; returns the file path."""
-        path = self.path_for(key)
-        payload = {"version": SCHEMA_VERSION,
-                   "key": [key[0], int(key[1]), int(key[2])],
-                   "record": record_to_json(rec)}
-        atomic_write_json(self.root, path, payload)
+        path = self.put_raw(key, record_to_json(rec))
         with self._lock:
             self.stats.writes += 1
         return path
 
-    # -- inventory ----------------------------------------------------------
-    def _files(self) -> List[str]:
-        try:
-            names = os.listdir(self.root)
-        except OSError:
-            return []
-        return sorted(n for n in names if n.endswith(".json"))
-
-    def __len__(self) -> int:
-        return len(self._files())
-
-    def keys(self) -> Iterator[StoreKey]:
-        """Keys of every loadable record (corrupted files skipped)."""
-        for name in self._files():
-            try:
-                with open(os.path.join(self.root, name)) as f:
-                    payload = json.load(f)
-                if payload.get("version") != SCHEMA_VERSION:
-                    continue
-                yield self._key_from_payload(payload)
-            except (OSError, ValueError, KeyError, TypeError):
-                continue
-
-    def clear(self) -> int:
-        """Delete every stored record; returns how many files were removed."""
-        n = 0
-        for name in self._files():
-            try:
-                os.unlink(os.path.join(self.root, name))
-                n += 1
-            except OSError:
-                pass
-        return n
-
-    def compact(self, max_age_s: Optional[float] = None,
-                max_entries: Optional[int] = None) -> Dict[str, int]:
-        """Garbage-collect the store: stale schemas, TTL, entry cap.
-
-        Drops (1) files carrying a foreign schema generation or that no
-        longer parse — they can never be served, only re-skipped on
-        every ``get`` — (2) files older than ``max_age_s`` (by mtime;
-        the TTL), and (3) the oldest files beyond ``max_entries``
-        (newest survive). Deletion is plain ``unlink``: a concurrent
-        reader either opened the file first (and reads the old record)
-        or misses and re-traces — never a torn read. Returns removal
-        counts by reason plus the surviving entry count.
-        """
-        now = time.time()
-        valid: List[tuple] = []  # (mtime, name) of loadable current-schema
-        removed = {"stale_schema": 0, "expired": 0, "over_cap": 0}
-
-        def _unlink(name: str, reason: str) -> None:
-            try:
-                os.unlink(os.path.join(self.root, name))
-                removed[reason] += 1
-            except OSError:
-                pass  # a concurrent compact/clear got there first
-
-        for name in self._files():
-            path = os.path.join(self.root, name)
-            try:
-                mtime = os.path.getmtime(path)
-                with open(path) as f:
-                    payload = json.load(f)
-                if payload.get("version") != SCHEMA_VERSION:
-                    raise ValueError("foreign schema")
-                self._key_from_payload(payload)
-                record_from_json(payload["record"])  # must be servable:
-                # a parseable file whose record cannot load would be
-                # re-skipped by every get() forever — exactly what
-                # compaction exists to drop
-            except (OSError, ValueError, KeyError, TypeError):
-                _unlink(name, "stale_schema")
-                continue
-            if max_age_s is not None and now - mtime > max_age_s:
-                _unlink(name, "expired")
-                continue
-            valid.append((mtime, name))
-        if max_entries is not None and len(valid) > max_entries:
-            valid.sort()  # oldest first
-            doomed, valid = valid[:len(valid) - max_entries], \
-                valid[len(valid) - max_entries:]
-            for _, name in doomed:
-                _unlink(name, "over_cap")
-        return {**removed, "removed": sum(removed.values()),
-                "kept": len(valid)}
-
+    # -- introspection ------------------------------------------------------
     def info(self) -> Dict[str, int]:
         return {"store_entries": len(self), **self.stats.as_dict()}

@@ -1,0 +1,414 @@
+"""Multi-host fabric: routing stability, single-server parity, generation
+distribution, federated feedback merge.
+
+Tier-1: deterministic routing (hash-seed/process stable), N-replica
+frontend returning identical estimates to one ``AbacusServer``,
+concurrent submit waves, a mid-load ``publish_generation`` never mixing
+generations within any replica's tick (deterministic, gated tracer),
+and the federated feedback -> central refit -> broadcast loop. Tier-2
+(``slow``): a live fleet under sustained concurrent load with repeated
+publishes.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import Machine
+from repro.serve import (AbacusServer, AdmissionController, ClusterFrontend,
+                         GatewayReplica, GenerationPublisher, HashRing,
+                         ModelGeneration, PredictionService, Query,
+                         config_fingerprint)
+
+from test_prediction_service import _abacus, _counting_tracer, _fake_cfg
+
+GIB = 2**30
+
+
+def _fleet(n, tmp_path=None, calls=None, **kw):
+    roots = {}
+    if tmp_path is not None:
+        roots = {"trace_root": str(tmp_path / "traces"),
+                 "feedback_root": str(tmp_path / "feedback")}
+    return ClusterFrontend(_abacus(), n_replicas=n,
+                           tracer=_counting_tracer(
+                               calls if calls is not None else []),
+                           **roots, **kw)
+
+
+def _verdict(est):
+    """The comparable core of one estimate (tick/replica stripped)."""
+    return (est["model"], round(est["time_s"], 12),
+            round(est["memory_bytes"], 6), est["admitted"],
+            est["generation"])
+
+
+def _grid(names="abcdef", batches=(2, 4), seqs=(32, 64)):
+    return [(_fake_cfg(n), b, s) for n in names for b in batches
+            for s in seqs]
+
+
+# -- consistent-hash routing --------------------------------------------------
+
+
+def test_ring_routing_is_deterministic_and_balanced():
+    ring = HashRing([f"r{i}" for i in range(4)], vnodes=64)
+    keys = [f"{i:032x}" for i in range(256)]
+    table = ring.table(keys)
+    assert table == ring.table(keys)              # pure function
+    counts = {}
+    for owner in table.values():
+        counts[owner] = counts.get(owner, 0) + 1
+    assert set(counts) == {f"r{i}" for i in range(4)}
+    # 64 vnodes keep the split sane: no replica starves or hogs
+    assert all(256 * 0.05 <= c <= 256 * 0.55 for c in counts.values()), counts
+
+
+def test_ring_rejects_degenerate_fleets():
+    with pytest.raises(ValueError):
+        HashRing([])
+    with pytest.raises(ValueError):
+        HashRing(["r0", "r0"])
+
+
+def test_routing_is_stable_across_processes_and_hash_seeds():
+    """The slice a replica owns must be a pure function of the key: a
+    different process with a different PYTHONHASHSEED must produce the
+    same routing table (CI re-runs this whole module under two random
+    seeds — this test locks the property in-repo as well)."""
+    keys = [f"{i:032x}" for i in range(64)]
+    here = HashRing(["r0", "r1", "r2"], vnodes=32).table(keys)
+    code = """
+import json, sys
+sys.path.insert(0, {src!r})
+from repro.serve.cluster import HashRing
+keys = [f"{{i:032x}}" for i in range(64)]
+print(json.dumps(HashRing(["r0", "r1", "r2"], vnodes=32).table(keys)))
+""".format(src=os.path.join(os.path.dirname(__file__), "..", "src"))
+    seed = "123" if os.environ.get("PYTHONHASHSEED") != "123" else "321"
+    env = {**os.environ, "PYTHONHASHSEED": seed}
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, check=True)
+    assert json.loads(out.stdout.strip()) == here
+
+
+def test_fingerprint_sharding_keeps_a_model_on_one_replica(tmp_path):
+    """Sharding is by config fingerprint, not the full key: every shape
+    of one model lands on one replica (cache locality), and the trace
+    files land only in that replica's store slice."""
+    fleet = _fleet(3, tmp_path)
+    with fleet:
+        fleet.predict_many(_grid(names="ab"))
+    for name in "ab":
+        fp = config_fingerprint(_fake_cfg(name))
+        owner = fleet.replica_for(fp)
+        owned = [k for k in owner.service.store.keys() if k[0] == fp]
+        assert len(owned) == 4                    # every (batch, seq) shape
+        for replica in fleet.replicas:
+            if replica is not owner:
+                assert all(k[0] != fp for k in replica.service.store.keys())
+
+
+# -- acceptance: identical estimates to a single server -----------------------
+
+
+def test_cluster_matches_single_server_estimates():
+    """Deterministic acceptance check: the N-replica frontend returns
+    per-query estimates identical to one ``AbacusServer`` over the same
+    predictor and tracer — sharding changes where a query runs, never
+    what it answers."""
+    queries = _grid()
+    with AbacusServer(PredictionService(
+            _abacus(), tracer=_counting_tracer([]))) as srv:
+        base = srv.predict_many(queries)
+    for n in (1, 3, 4):
+        with _fleet(n) as fleet:
+            ests = fleet.predict_many(queries)
+        assert [_verdict(e) for e in ests] == [_verdict(b) for b in base]
+        assert {e["replica"] for e in ests} <= \
+            {r.name for r in fleet.replicas}
+
+
+def test_concurrent_waves_match_single_server_verdicts():
+    """Satellite: concurrent submit waves across replicas produce the
+    same verdict multiset as a single-server run."""
+    queries = _grid()
+    with AbacusServer(PredictionService(
+            _abacus(), tracer=_counting_tracer([]))) as srv:
+        expected = sorted(_verdict(e) for e in srv.predict_many(queries))
+    with _fleet(3) as fleet:
+        results, errors = [], []
+        lock = threading.Lock()
+
+        def wave(qs):
+            try:
+                futs = fleet.submit_many(qs)
+                got = [f.result(30) for f in futs]
+                with lock:
+                    results.extend(got)
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        waves = [queries[i::4] for i in range(4)]
+        threads = [threading.Thread(target=wave, args=(w,)) for w in waves]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+    assert not errors
+    assert sorted(_verdict(e) for e in results) == expected
+    info = fleet.server_info()
+    assert info["fleet"]["completed"] == len(queries)
+    assert info["fleet"]["failed"] == 0
+
+
+def test_submit_many_preserves_input_order():
+    queries = _grid(names="abc", batches=(2, 4, 8), seqs=(32,))
+    with _fleet(3) as fleet:
+        ests = [f.result(30) for f in fleet.submit_many(queries)]
+    for (cfg, b, s), est in zip(queries, ests):
+        assert est["model"] == cfg.name
+
+
+# -- generation distribution --------------------------------------------------
+
+
+def test_publish_reaches_every_replica_between_ticks():
+    with _fleet(3) as fleet:
+        fleet.predict_many(_grid(names="ab", seqs=(32,)))
+        gen = ModelGeneration(number=1, abacus=_abacus(seed=5))
+        assert fleet.publish_generation(gen)
+        ests = fleet.predict_many(_grid(names="ab", seqs=(32,)))
+    assert all(e["generation"] == 1 for e in ests)
+    assert all(r.service.generation == 1 for r in fleet.replicas)
+    assert fleet.stats()["generations"] == [1]
+    pub = fleet.publisher.info()
+    assert pub["published"] == 1 and pub["deliveries"] == 3
+    assert pub["failures"] == 0 and pub["last_generation"] == 1
+
+
+def test_mid_load_publish_never_mixes_generations_on_any_replica():
+    """Acceptance (deterministic): hold a tick open on EVERY replica
+    (gated tracer), publish a generation mid-tick, pile on more
+    queries, release — no (replica, tick) pair may span two
+    generations, every in-flight tick finishes on generation 0, and
+    every replica ends on generation 1."""
+    n = 3
+    fleet = _fleet(n)
+    # one config per replica, so one gated trace holds each replica's tick
+    owned, i = {}, 0
+    while len(owned) < n and i < 200:
+        cfg = _fake_cfg(f"g{i}")
+        owner = fleet.replica_for(config_fingerprint(cfg)).name
+        owned.setdefault(owner, cfg)
+        i += 1
+    assert len(owned) == n
+    base = _counting_tracer([])
+    started, release = set(), threading.Event()
+    started_lock, all_started = threading.Lock(), threading.Event()
+
+    def gated_tracer(cfg, batch, seq):
+        if not release.is_set():
+            with started_lock:
+                started.add(cfg.name)
+                if len(started) >= n:
+                    all_started.set()
+            release.wait(10)
+        return base(cfg, batch, seq)
+
+    for replica in fleet.replicas:
+        replica.service._tracer = gated_tracer
+    with fleet:
+        first = fleet.submit_many([(cfg, 2, 32) for cfg in owned.values()])
+        assert all_started.wait(10)           # every replica is mid-tick
+        assert fleet.publish_generation(
+            ModelGeneration(number=1, abacus=_abacus(seed=5)))
+        late = fleet.submit_many([(cfg, b, 32) for cfg in owned.values()
+                                  for b in (4, 8)])
+        release.set()
+        ests = [f.result(30) for f in first + late]
+    by_tick = {}
+    for e in ests:
+        by_tick.setdefault((e["replica"], e["tick"]), set()).add(
+            e["generation"])
+    assert all(len(gens) == 1 for gens in by_tick.values()), by_tick
+    for e in ests[:n]:                        # in-flight ticks: generation 0
+        assert e["generation"] == 0
+    assert all(r.service.generation == 1 for r in fleet.replicas)
+    assert all(r.stats.gen_swaps == 1 for r in fleet.replicas)
+
+
+# -- federated feedback + central refit ---------------------------------------
+
+
+def test_observe_routes_to_owning_replica_slice(tmp_path):
+    fleet = _fleet(3, tmp_path)
+    queries = _grid(names="abcd", seqs=(32,))
+    with fleet:
+        ests = fleet.predict_many(queries)
+        for (cfg, b, s), est in zip(queries, ests):
+            fleet.observe(cfg, b, s, est["time_s"] * 2.0,
+                          est["memory_bytes"] * 1.5,
+                          predicted_time_s=est["time_s"],
+                          predicted_mem_bytes=est["memory_bytes"],
+                          generation=est["generation"])
+    total = 0
+    for replica in fleet.replicas:
+        for key, obs in replica.feedback.items():
+            # every observation sits in the slice that owns its fingerprint
+            assert fleet.replica_for(key[0]) is replica
+            total += len(obs)
+    assert total == len(queries)
+    # fleet calibration is the count-weighted merge of replica windows
+    cal = fleet.stats()["calibration"]
+    assert cal["count"] == len(queries)
+    assert cal["time_mre"] == pytest.approx(0.5)   # |p - 2p| / 2p
+    assert cal["mem_mre"] == pytest.approx(1 / 3)
+    assert fleet.sync_feedback() == len(queries)
+    assert fleet.feedback.total() == len(queries)
+    assert fleet.sync_feedback() == 0              # merge is idempotent
+
+
+def test_federated_refit_publishes_to_whole_fleet(tmp_path):
+    """The whole loop: drifted completions land in per-replica slices,
+    the central refitter consumes their federated merge (resolving
+    records from the owning shards), and the new generation reaches
+    every replica — whose next predictions track the drift."""
+    fleet = _fleet(3, tmp_path)
+    refitter = fleet.make_refitter(min_observations=6, min_train_records=4)
+    queries = _grid()
+    with fleet:
+        ests = fleet.predict_many(queries)
+        for (cfg, b, s), est in zip(queries, ests):
+            fleet.observe(cfg, b, s, est["time_s"] * 3.0,
+                          est["memory_bytes"] * 1.5,
+                          predicted_time_s=est["time_s"],
+                          predicted_mem_bytes=est["memory_bytes"],
+                          generation=est["generation"])
+        assert refitter.should_refit()        # federated sync armed it
+        gen = refitter.refit_now()
+        assert gen is not None and gen.number == 1
+        assert gen.n_unresolved == 0          # every key resolved cross-shard
+        assert gen.n_feedback == len(queries)
+        for _ in range(100):                  # swaps land between ticks
+            if all(r.service.generation == 1 for r in fleet.replicas):
+                break
+            time.sleep(0.02)
+        assert all(r.service.generation == 1 for r in fleet.replicas)
+        post = fleet.predict_many(queries)
+    # the fleet now predicts the drifted regime everywhere
+    for pre, after in zip(ests, post):
+        assert after["generation"] == 1
+        assert after["time_s"] > pre["time_s"] * 1.5
+    stats = fleet.stats()
+    assert stats["refit"]["refits"] == 1
+    assert stats["refit"]["synced"] == len(queries)
+    assert stats["publisher"]["deliveries"] == 3
+    assert stats["generations"] == [1]
+
+
+def test_admission_controller_works_against_the_fleet(tmp_path):
+    """Existing consumers point at a fleet unchanged: the controller's
+    predict_many/observe contract is the frontend's API."""
+    fleet = _fleet(2, tmp_path)
+    machines = [Machine("m1", 1e21), Machine("m2", 1e21)]
+    with fleet:
+        ctl = AdmissionController(fleet, machines, plan="optimal")
+        verdicts = ctl.admit([Query(_fake_cfg(n), b, 32)
+                              for n in ("a", "b") for b in (2, 4)])
+        assert all(v.admitted for v in verdicts)
+        for v in verdicts:
+            ctl.report_completion(v.job_id, time_s=v.time_s * 2,
+                                  mem_bytes=v.mem_bytes)
+    assert ctl.cluster_state()["resident_jobs"] == 0
+    assert sum(len(obs) for r in fleet.replicas
+               for _, obs in r.feedback.items()) == 4
+
+
+def test_prebuilt_replicas_and_errors(tmp_path):
+    reps = [GatewayReplica(f"n{i}", _abacus(),
+                           tracer=_counting_tracer([])) for i in range(2)]
+    fleet = ClusterFrontend(replicas=reps)
+    with fleet:
+        est = fleet.predict_one(_fake_cfg(), 2, 32)
+    assert est["replica"] in {"n0", "n1"}
+    with pytest.raises(ValueError):
+        ClusterFrontend()                     # no abacus, no replicas
+    with pytest.raises(ValueError):
+        fleet.sync_feedback()                 # no central store configured
+    with pytest.raises(ValueError):
+        fleet.make_refitter()
+
+
+def test_publisher_counts_failing_replica_without_losing_broadcast():
+    class _Broken:
+        def publish_generation(self, gen):
+            raise RuntimeError("unreachable host")
+
+    good = GatewayReplica("ok", _abacus(), tracer=_counting_tracer([]))
+    pub = GenerationPublisher([good, _Broken()])
+    gen = ModelGeneration(number=1, abacus=_abacus(seed=3))
+    assert not pub.publish_generation(gen)    # not all delivered...
+    assert good.service.generation == 1       # ...but the good host swapped
+    info = pub.info()
+    assert info["failures"] == 1 and info["deliveries"] == 1
+
+
+# -- tier-2: live fleet under sustained load ----------------------------------
+
+
+@pytest.mark.slow
+def test_live_fleet_load_publishes_and_verdict_parity():
+    """Sustained concurrent submits against a 3-replica fleet while
+    generations publish mid-load: no mixed-generation tick anywhere, no
+    failures, and the generation-0 verdict set matches a single server."""
+    queries = _grid()
+    with AbacusServer(PredictionService(
+            _abacus(), tracer=_counting_tracer([]))) as srv:
+        expected = sorted(_verdict(e) for e in srv.predict_many(queries))
+    with _fleet(3) as fleet:
+        stop = threading.Event()
+        collected, errors = [], []
+        lock = threading.Lock()
+
+        def client(share):
+            while not stop.is_set():
+                try:
+                    got = [f.result(60)
+                           for f in fleet.submit_many(share)]
+                    with lock:
+                        collected.extend(got)
+                except Exception as e:  # pragma: no cover
+                    errors.append(e)
+                    return
+
+        threads = [threading.Thread(target=client, args=(queries[i::3],))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        first = [f.result(60) for f in fleet.submit_many(queries)]
+        for number in (1, 2, 3):              # publishes under load
+            fleet.publish_generation(
+                ModelGeneration(number=number, abacus=_abacus(seed=number)))
+            time.sleep(0.05)
+        time.sleep(0.2)
+        stop.set()
+        for t in threads:
+            t.join(60)
+        assert not errors
+        final = fleet.predict_many(queries)
+    assert sorted(_verdict(e) for e in first) == expected
+    by_tick = {}
+    for e in collected + first + final:
+        by_tick.setdefault((e["replica"], e["tick"]), set()).add(
+            e["generation"])
+    assert all(len(gens) == 1 for gens in by_tick.values())
+    assert all(e["generation"] == 3 for e in final)
+    info = fleet.server_info()
+    assert info["fleet"]["failed"] == 0

@@ -1,0 +1,360 @@
+"""JsonFileStore base: property tests shared by every durable store.
+
+Round-trip, ``merge`` commutativity/idempotence, compaction never
+dropping the newest entry per key, corrupt-file injection never
+raising, and the schema-version unification regression (TraceStore and
+FeedbackStore historically carried *separate* version constants and
+skip semantics; one v-mixed directory now behaves identically under
+both). Properties run with or without hypothesis via ``tests/_hypo``.
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.serve import kvstore
+from repro.serve.feedback_store import FeedbackStore
+from repro.serve.kvstore import JsonFileStore
+from repro.serve.trace_store import SCHEMA_VERSION, TraceStore
+
+from test_prediction_service import _random_edges
+from test_trace_store import _record
+
+
+def _key(rng) -> tuple:
+    return (f"{int(rng.integers(0, 16**8)):08x}" * 2,
+            int(rng.integers(1, 5)) * 2, int(rng.choice([32, 64, 128])))
+
+
+def _rand_record(rng, name=None):
+    batch, seq = int(rng.integers(1, 5)) * 2, int(rng.choice([32, 64]))
+    rec = _record(name or f"m{int(rng.integers(1e6))}", batch=batch, seq=seq)
+    return rec
+
+
+# -- unification regression (satellite: one version ladder) -------------------
+
+
+def test_schema_version_is_shared_by_every_store():
+    """The latent bug class: TraceStore and FeedbackStore each had their
+    own SCHEMA_VERSION constant, so bumping one silently left the other
+    on an old ladder. Both now inherit the single kvstore constant."""
+    assert TraceStore.schema_version == FeedbackStore.schema_version
+    assert TraceStore.schema_version == kvstore.SCHEMA_VERSION
+    from repro.serve import feedback_store, trace_store
+    assert trace_store.SCHEMA_VERSION == feedback_store.SCHEMA_VERSION
+    assert trace_store.SCHEMA_VERSION == kvstore.SCHEMA_VERSION
+    assert SCHEMA_VERSION == kvstore.SCHEMA_VERSION
+
+
+def test_v_mixed_directory_loads_identically_in_both_stores(tmp_path):
+    """A directory holding entries from several schema generations (an
+    in-place upgrade, a rolled-back host) must serve current-version
+    entries and skip+count the rest — same semantics in both stores."""
+    ts = TraceStore(str(tmp_path / "traces"))
+    fb = FeedbackStore(str(tmp_path / "fb"))
+    keys = [("aa" * 8, 2, 32), ("bb" * 8, 4, 32), ("cc" * 8, 8, 64)]
+    for key in keys:
+        ts.put(key, _record(batch=key[1], seq=key[2]))
+        fb.add(key, 1.5, 2e9, ts=10.0)
+    # rewrite one entry per store to a PAST version, one to a FUTURE one
+    for store, versions in ((ts, (0, 99)), (fb, (0, 99))):
+        for key, version in zip(keys[:2], versions):
+            path = store.path_for(key)
+            with open(path) as f:
+                payload = json.load(f)
+            payload["version"] = version
+            with open(path, "w") as f:
+                json.dump(payload, f)
+    # loads: current entry served, foreign versions skipped (never fatal)
+    assert ts.get(keys[2]) is not None and fb.get(keys[2]) != []
+    for key in keys[:2]:
+        assert ts.get(key) is None
+        assert fb.get(key) == []
+    assert ts.stats.corrupt >= 2 and fb.stats.corrupt >= 2
+    assert list(ts.keys()) == [keys[2]]
+    assert fb.keys() == [keys[2]]
+    assert fb.total(rescan=True) == 1
+    # compaction drops the unservable generations, keeps the current one
+    assert ts.compact()["stale_schema"] == 2
+    assert fb.compact()["corrupt_files"] == 2
+    assert len(ts._files()) == 1 and len(fb._files()) == 1
+    assert ts.get(keys[2]) is not None and fb.get(keys[2]) != []
+
+
+def test_filename_key_disagreement_dead_on_every_path(tmp_path):
+    """Skip-semantics unification: a renamed file (stored key disagrees
+    with its filename) is dead EVERYWHERE — get() refuses it (historic
+    FeedbackStore served it), iter/keys/merge never propagate it, and
+    compact() reclaims it instead of letting it re-count as corrupt on
+    every read forever."""
+    ts = TraceStore(str(tmp_path / "t"))
+    fb = FeedbackStore(str(tmp_path / "f"))
+    key, other = ("11" * 8, 2, 32), ("22" * 8, 4, 64)
+    ts.put(key, _record())
+    fb.add(key, 1.0, 1e9, ts=5.0)
+    os.rename(ts.path_for(key), ts.path_for(other))
+    os.rename(fb.path_for(key), fb.path_for(other))
+    assert ts.get(other) is None and ts.stats.corrupt == 1
+    assert fb.get(other) == [] and fb.stats.corrupt == 1
+    assert ts.get(key) is None and fb.get(key) == []  # original key too
+    assert list(ts.keys()) == [] and fb.keys() == []
+    assert fb.total(rescan=True) == 0
+    sink_t, sink_f = TraceStore(str(tmp_path / "st")), \
+        FeedbackStore(str(tmp_path / "sf"))
+    assert sink_t.merge(ts) == 0 and sink_f.merge(fb) == 0
+    assert ts.compact()["stale_schema"] == 1
+    assert fb.compact()["corrupt_files"] == 1
+    assert ts._files() == [] and fb._files() == []
+
+
+# -- round-trip ----------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_trace_roundtrip_property(seed, n):
+    rng = np.random.default_rng(seed)
+    with __import__("tempfile").TemporaryDirectory() as root:
+        store = TraceStore(root)
+        entries = {}
+        for _ in range(n):
+            key = _key(rng)
+            rec = _rand_record(rng)
+            store.put(key, rec)
+            entries[key] = rec
+        for key, rec in entries.items():
+            got = store.get(key)
+            assert got == rec
+            assert got.nsm_edges == rec.nsm_edges  # tuple keys survive JSON
+        assert set(store.keys()) == set(entries)
+        # a fresh instance over the same directory sees everything
+        again = TraceStore(root)
+        assert again.raw_snapshot() == store.raw_snapshot()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8))
+def test_feedback_roundtrip_property(seed, n):
+    rng = np.random.default_rng(seed)
+    with __import__("tempfile").TemporaryDirectory() as root:
+        store = FeedbackStore(root)
+        key = _key(rng)
+        for i in range(n):
+            store.add(key, float(rng.integers(1, 100)) / 10.0,
+                      float(rng.integers(1, 100)) * 1e6, ts=float(i))
+        obs = store.get(key)
+        assert len(obs) == n
+        assert [o.ts for o in obs] == sorted(o.ts for o in obs)
+        assert FeedbackStore(root).total() == n
+
+
+# -- merge: commutative, idempotent, convergent -------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8))
+def test_trace_merge_is_commutative_and_idempotent(seed, n):
+    """Any merge order over any split converges to one fixed point —
+    including keys where two hosts traced *different* records."""
+    rng = np.random.default_rng(seed)
+    entries = [(_key(rng), _rand_record(rng)) for _ in range(n)]
+    # one deliberately conflicting key: both halves write different records
+    conflict = _key(rng)
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        a, b = TraceStore(root + "/a"), TraceStore(root + "/b")
+        half = n // 2
+        for key, rec in entries[:half]:
+            a.put(key, rec)
+        for key, rec in entries[half:]:
+            b.put(key, rec)
+        a.put(conflict, _rand_record(rng, name="host_a"))
+        b.put(conflict, _rand_record(rng, name="host_b"))
+        m1, m2 = TraceStore(root + "/m1"), TraceStore(root + "/m2")
+        m1.merge(a), m1.merge(b)
+        m2.merge(b), m2.merge(a)
+        assert m1.raw_snapshot() == m2.raw_snapshot()  # commutative
+        assert m1.merge(a) == 0 and m1.merge(b) == 0   # idempotent
+        assert set(m1.keys()) == {k for k, _ in entries} | {conflict}
+        # the conflict key may count twice (imported, then replaced by
+        # the deterministic winner) — never less than one per entry
+        assert len(m1) <= m1.stats.merged <= len(m1) + 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 12))
+def test_feedback_merge_three_way_converges(seed, n):
+    rng = np.random.default_rng(seed)
+    obs = [(_key(rng), float(rng.integers(1, 100)) / 10.0,
+            float(rng.integers(1, 100)) * 1e6, float(i)) for i in range(n)]
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        shards = [FeedbackStore(f"{root}/s{i}") for i in range(3)]
+        for i, (key, t, m, ts) in enumerate(obs):
+            shards[i % 3].add(key, t, m, ts=ts)
+        orders = [(0, 1, 2), (2, 1, 0), (1, 2, 0)]
+        snaps = []
+        for j, order in enumerate(orders):
+            central = FeedbackStore(f"{root}/c{j}")
+            for idx in order:
+                central.merge(shards[idx])
+            for idx in order:                     # merge AGAIN: idempotent
+                assert central.merge(shards[idx]) == 0
+            snaps.append(central.snapshot())
+        assert snaps[0] == snaps[1] == snaps[2]
+        assert sum(len(v) for v in snaps[0].values()) == n
+
+
+# -- compaction keeps the newest entry per key --------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(1, 4))
+def test_trace_compact_never_drops_newest(seed, n, cap):
+    rng = np.random.default_rng(seed)
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        store = TraceStore(root)
+        now = time.time()
+        keys = []
+        for i in range(n):
+            key = _key(rng)
+            store.put(key, _rand_record(rng))
+            # distinct, strictly increasing mtimes (i newest at i=n-1)
+            t = now - 1000 + i
+            os.utime(store.path_for(key), (t, t))
+            keys.append(key)
+        out = store.compact(max_entries=cap)
+        assert out["kept"] == min(cap, n)
+        assert store.get(keys[-1]) is not None     # newest always survives
+        survivors = set(store.keys())
+        assert survivors == set(keys[-min(cap, n):])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 10), st.integers(1, 3))
+def test_feedback_compact_never_drops_newest_per_key(seed, n, cap):
+    rng = np.random.default_rng(seed)
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        store = FeedbackStore(root)
+        keys = [_key(rng), _key(rng)]
+        newest = {}
+        for key in keys:
+            for i in range(n):
+                ts = float(i)
+                store.add(key, float(rng.integers(1, 100)) / 10.0, 1e9, ts=ts)
+                newest[key] = ts
+        store.compact(max_per_key=cap)
+        for key in keys:
+            obs = store.get(key)
+            assert len(obs) == min(cap, n)
+            assert obs[-1].ts == newest[key]       # newest always survives
+        # TTL that covers the newest observation also keeps it
+        store.compact(max_age_s=time.time())       # everything is younger
+        for key in keys:
+            assert store.get(key)[-1].ts == newest[key]
+
+
+# -- corrupt injection never raises -------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_corrupt_injection_never_raises(seed, n_garbage):
+    """Random garbage — overwritten entries, foreign junk files, binary
+    noise — must never raise from any read, merge, or compact path."""
+    rng = np.random.default_rng(seed)
+    garbage = [bytes(rng.integers(0, 256, size=int(rng.integers(0, 200)),
+                                  dtype=np.uint8)) for _ in range(n_garbage)]
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        ts, fb = TraceStore(root + "/t"), FeedbackStore(root + "/f")
+        key = _key(rng)
+        ts.put(key, _rand_record(rng))
+        fb.add(key, 1.0, 1e9, ts=1.0)
+        # overwrite the real entries with noise + drop foreign junk files
+        for store, path in ((ts, ts.path_for(key)), (fb, fb.path_for(key))):
+            with open(path, "wb") as f:
+                f.write(garbage[0] if garbage else b"")
+            for i, blob in enumerate(garbage):
+                with open(os.path.join(store.root,
+                                       f"{store.FILE_PREFIX}junk{i}.json"),
+                          "wb") as f:
+                    f.write(blob)
+        assert ts.get(key) is None
+        assert fb.get(key) == []
+        assert list(ts.keys()) == [] and fb.keys() == []
+        assert fb.total(rescan=True) == 0 and len(ts) >= 1
+        sink_t, sink_f = TraceStore(root + "/st"), FeedbackStore(root + "/sf")
+        assert sink_t.merge(ts) == 0 and sink_f.merge(fb) == 0
+        ts.compact(), fb.compact()
+        assert list(ts._files()) == [] or all(
+            ts._load_payload(os.path.join(ts.root, f)) for f in ts._files())
+        # a fresh put/add repairs each store
+        ts.put(key, _rand_record(rng))
+        fb.add(key, 2.0, 1e9, ts=2.0)
+        assert ts.get(key) is not None and len(fb.get(key)) == 1
+
+
+# -- the base is reusable for new stores --------------------------------------
+
+
+class _TagStore(JsonFileStore):
+    """Minimal subclass: value = {tag: count}, merge = max-count union."""
+
+    FILE_PREFIX = "tag_"
+    VALUE_FIELD = "tags"
+
+    def _check_raw(self, raw):
+        if not isinstance(raw, dict):
+            raise ValueError("missing tag map")
+        return raw
+
+    def _merge_raw(self, mine, theirs):
+        merged = dict(mine or {})
+        n_new = 0
+        for tag, count in theirs.items():
+            if int(merged.get(tag, -1)) < int(count):
+                merged[tag] = int(count)
+                n_new += 1
+        return merged, n_new
+
+
+def test_base_supports_new_store_kinds(tmp_path):
+    a, b = _TagStore(str(tmp_path / "a")), _TagStore(str(tmp_path / "b"))
+    key = ("dd" * 8, 2, 32)
+    a.put_raw(key, {"x": 1, "y": 5})
+    b.put_raw(key, {"x": 3, "z": 2})
+    m1, m2 = _TagStore(str(tmp_path / "m1")), _TagStore(str(tmp_path / "m2"))
+    m1.merge(a), m1.merge(b)
+    m2.merge(b), m2.merge(a)
+    assert m1.raw_snapshot() == m2.raw_snapshot() \
+        == {key: {"x": 3, "y": 5, "z": 2}}
+    assert m1.merge(a) == 0
+    # shares the fleet-wide schema version and skip semantics for free
+    assert _TagStore.schema_version == TraceStore.schema_version
+    with open(m1.path_for(key), "w") as f:
+        f.write("{ not json !!")
+    assert m1.get_raw(key) is None
+
+
+def test_clear_removes_only_own_prefix(tmp_path):
+    """Two stores sharing one directory must not clear each other."""
+    ts = TraceStore(str(tmp_path))
+    fb = FeedbackStore(str(tmp_path))
+    key = ("ee" * 8, 2, 32)
+    ts.put(key, _record())
+    fb.add(key, 1.0, 1e9, ts=1.0)
+    assert fb.clear() == 1
+    assert ts.get(key) is not None  # trace entry survived feedback clear
+
+
+def test_merge_raw_contract_is_enforced():
+    with pytest.raises(NotImplementedError):
+        JsonFileStore.__new__(JsonFileStore)._merge_raw(None, {})
