@@ -1,0 +1,173 @@
+"""Elastic fleet resharding: live 4 -> 8 scale-out under submit load.
+
+A naive modulo/rehash shard map invalidates ~100% of key placements
+when the replica count changes — every warm ``TraceStore`` slice and
+prediction cache would be orphaned on every scale event. The
+``HashRing`` bounds that to ~1/N of the keyspace per replica change,
+and ``ClusterFrontend.resize`` migrates exactly the moved slice (drain
+-> migrate -> cutover, through the commutative ``JsonFileStore.split``
+/ ``merge`` contract) while clients keep submitting.
+
+This benchmark proves the bound end to end on a real fleet:
+
+  * a 4-replica fleet warms N distinct keys (traces + one feedback
+    observation each), then ``resize(8)`` runs under concurrent client
+    load — every in-flight Future must resolve, zero failures;
+  * **moved keys <= 60% of the keyspace** (the naive rehash floor is
+    100%) — asserted on the actual migrated trace-key count AND on the
+    ring's exact keyspace measure (``RingDiff.moved_fraction``);
+  * estimates are asserted identical pre/post-reshard, serialized
+    byte-for-byte at the repo's parity precision (time @ 1e-12,
+    memory @ 1e-6 — absorbing BLAS reduction-order ulps when a moved
+    key's prediction is recomputed in a different-shaped micro-batch);
+  * the fleet then scales back 8 -> 4 (``resize``), re-asserting
+    parity — a full grow/shrink cycle never changes an answer.
+
+    PYTHONPATH=src python benchmarks/bench_reshard.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serve import ClusterFrontend  # noqa: E402
+
+try:  # package context (python -m benchmarks.run) or standalone script
+    from benchmarks.bench_cluster import (_Cfg, _fit_abacus,  # noqa: E402
+                                          _make_tracer)
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from bench_cluster import _Cfg, _fit_abacus, _make_tracer  # noqa: E402
+
+MOVED_CEILING = 0.60   # acceptance: 4 -> 8 moves at most this fraction
+NAIVE_FLOOR = 1.00     # a full rehash moves (invalidates) everything
+
+
+def _fleet(ab, n, root, calls):
+    return ClusterFrontend(ab, n_replicas=n,
+                           trace_root=os.path.join(root, "traces"),
+                           feedback_root=os.path.join(root, "feedback"),
+                           tracer=_make_tracer(calls))
+
+
+def _parity(fleet, keyset):
+    """Serialized verdicts at the repo's parity precision."""
+    return json.dumps([(e["model"], round(e["time_s"], 12),
+                        round(e["memory_bytes"], 6), e["admitted"],
+                        e["generation"])
+                       for e in fleet.predict_many(keyset)])
+
+
+def run(smoke: bool = True, out: str = "BENCH_reshard.json"):
+    n_keys = 96 if smoke else 256
+    clients = 4
+    ab = _fit_abacus()
+    keyset = [(_Cfg(i), 2 + 2 * (i % 2), 32) for i in range(n_keys)]
+    root = tempfile.mkdtemp(prefix="abacus_reshard_")
+    rows = []
+    try:
+        fleet = _fleet(ab, 4, root, [])
+        with fleet:
+            pre = _parity(fleet, keyset)          # warms every slice
+            for (cfg, b, s), est in zip(keyset,
+                                        fleet.predict_many(keyset)):
+                fleet.observe(cfg, b, s, est["time_s"] * 1.1,
+                              est["memory_bytes"],
+                              predicted_time_s=est["time_s"],
+                              predicted_mem_bytes=est["memory_bytes"])
+            # concurrent submit load across the cutover: every Future
+            # a client holds when the ring swaps MUST still resolve.
+            stop, errors, resolved = threading.Event(), [], []
+            lock = threading.Lock()
+
+            def client(share):
+                while not stop.is_set():
+                    try:
+                        got = [f.result(60)
+                               for f in fleet.submit_many(share)]
+                        with lock:
+                            resolved.append(len(got))
+                    except Exception as e:  # pragma: no cover
+                        errors.append(e)
+                        return
+
+            threads = [threading.Thread(target=client,
+                                        args=(keyset[i::clients],))
+                       for i in range(clients)]
+            for t in threads:
+                t.start()
+            t0 = time.perf_counter()
+            grow = fleet.resize(8)
+            t_grow = time.perf_counter() - t0
+            time.sleep(0.1)                       # load on the new ring
+            stop.set()
+            for t in threads:
+                t.join(60)
+            assert not errors, f"client failures across cutover: {errors}"
+            assert resolved, "no client wave resolved during the reshard"
+            post = _parity(fleet, keyset)
+            shrink = fleet.resize(4)
+            final = _parity(fleet, keyset)
+        assert pre == post, "4->8 reshard changed an estimate"
+        assert pre == final, "8->4 reshard changed an estimate"
+        moved_frac = grow["trace_keys_moved"] / n_keys
+        rows = [
+            ("n_keys", float(n_keys)),
+            ("clients", float(clients)),
+            ("waves_resolved_under_load", float(sum(resolved))),
+            ("grow_trace_keys_moved", float(grow["trace_keys_moved"])),
+            ("grow_feedback_keys_moved",
+             float(grow["feedback_keys_moved"])),
+            ("grow_moved_fraction", moved_frac),
+            ("grow_ring_moved_fraction", grow["moved_fraction_bound"]),
+            ("grow_cutover_ticks", float(grow["cutover_ticks"])),
+            ("grow_s", t_grow),
+            ("shrink_trace_keys_moved", float(shrink["trace_keys_moved"])),
+            ("shrink_ring_moved_fraction",
+             shrink["moved_fraction_bound"]),
+            ("keys_replayed", float(
+                fleet.reshard_stats["keys_replayed"])),
+            ("moved_ceiling", MOVED_CEILING),
+            ("naive_floor", NAIVE_FLOOR),
+        ]
+        if out:
+            payload = {name: val for name, val in rows}
+            payload["smoke"] = smoke
+            with open(out, "w") as f:
+                json.dump(payload, f, indent=2)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small keyset (seconds; CI tier-1)")
+    ap.add_argument("--out", default="BENCH_reshard.json")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out=args.out)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    vals = dict(rows)
+    failed = False
+    for name in ("grow_moved_fraction", "grow_ring_moved_fraction"):
+        if vals[name] > MOVED_CEILING:
+            print(f"# FAIL: {name} {vals[name]:.2f} exceeds the "
+                  f"{MOVED_CEILING:.0%} ceiling (naive rehash floor "
+                  f"{NAIVE_FLOOR:.0%})", file=sys.stderr)
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,7 @@ BENCHES = [
     ("server", "benchmarks.bench_server"),              # micro-batched gateway
     ("refit", "benchmarks.bench_refit"),                # online refit loop
     ("cluster", "benchmarks.bench_cluster"),            # sharded replica fleet
+    ("reshard", "benchmarks.bench_reshard"),            # elastic resharding
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
 

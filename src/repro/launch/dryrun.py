@@ -222,6 +222,11 @@ def main(argv=None) -> int:
                     help="gateway replicas: > 1 serves estimates from a "
                          "fingerprint-sharded ClusterFrontend (per-replica "
                          "trace/feedback slices under the store paths)")
+    ap.add_argument("--resize-to", type=int, default=0,
+                    help="live-reshard the fleet to this many replicas "
+                         "after the first arch (drain -> migrate -> "
+                         "cutover under the sweep's own load; requires "
+                         "--replicas > 1)")
     args = ap.parse_args(argv)
 
     service = server = None
@@ -261,6 +266,11 @@ def main(argv=None) -> int:
     archs = [args.arch] if args.arch else list_archs()
     shapes = [args.shape] if args.shape else list(SHAPES)
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    resize_to = int(args.resize_to or 0)
+    if resize_to and not hasattr(server, "resize"):
+        print("[dryrun] --resize-to needs a fleet (--replicas > 1); "
+              "ignoring", file=sys.stderr)
+        resize_to = 0
     failures = 0
     try:
         for arch in archs:
@@ -280,6 +290,16 @@ def main(argv=None) -> int:
                     if args.out:
                         with open(args.out, "a") as f:
                             f.write(json.dumps(rec) + "\n")
+            if resize_to:
+                # live reshard mid-sweep: remaining cells exercise the
+                # post-cutover fleet (warm slices migrated, not retraced)
+                mig = server.resize(resize_to)
+                print(f"[dryrun] resharded fleet {len(mig['from'])} -> "
+                      f"{len(mig['to'])} replicas: {mig['keys_moved']} keys "
+                      f"moved ({mig['moved_fraction_bound']:.0%} of keyspace; "
+                      f"naive rehash = 100%), {mig['cutover_ticks']} drain "
+                      "ticks", file=sys.stderr)
+                resize_to = 0
     finally:
         if server is not None:
             # works for both the single gateway and the cluster frontend
@@ -290,6 +310,11 @@ def main(argv=None) -> int:
                       f"time_mre={cal['time_mre']:.3f} "
                       f"time_drift={cal['time_drift']:+.3f} "
                       f"mem_mre={cal['mem_mre']:.3f}", file=sys.stderr)
+            reshard = getattr(server, "reshard_stats", None)
+            if reshard and reshard["reshards"]:
+                print(f"[dryrun] reshards={reshard['reshards']} "
+                      f"keys_moved={reshard['keys_moved']} "
+                      f"replayed={reshard['keys_replayed']}", file=sys.stderr)
             server.stop()
     return 1 if failures else 0
 

@@ -12,7 +12,7 @@ consumers that need it. All durable maps share one persistence base,
 
 from repro.serve.admission import AdmissionController, Verdict
 from repro.serve.cluster import (ClusterFrontend, GatewayReplica,
-                                 GenerationPublisher, HashRing)
+                                 GenerationPublisher, HashRing, RingDiff)
 from repro.serve.feedback_store import (CalibrationWindow, FeedbackStore,
                                         Observation)
 from repro.serve.kvstore import JsonFileStore, atomic_write_json
@@ -27,4 +27,4 @@ __all__ = ["AdmissionController", "Verdict", "PredictionService", "Query",
            "FeedbackStore", "Observation", "CalibrationWindow",
            "OnlineRefitter", "ModelGeneration", "JsonFileStore",
            "atomic_write_json", "ClusterFrontend", "GatewayReplica",
-           "GenerationPublisher", "HashRing"]
+           "GenerationPublisher", "HashRing", "RingDiff"]

@@ -19,7 +19,15 @@ is the fleet seam:
     its config fingerprint (computed ONCE here and forwarded via
     ``Query.fp``), fans a wave of submissions out so every replica's
     worker ticks concurrently on its partition, aggregates ``stats()``
-    fleet-wide, and broadcasts model generations.
+    fleet-wide, and broadcasts model generations. Membership is LIVE:
+    ``add_replica``/``remove_replica``/``resize`` run a drain ->
+    migrate -> cutover protocol that quiesces only the replicas losing
+    keyspace (``HashRing.diff``), hands their ``TraceStore``/
+    ``FeedbackStore`` slices to the new owners through the commutative
+    ``JsonFileStore.split``/``merge`` contract, swaps the ring
+    atomically, and replays queries that raced the cutover — a fleet
+    grows and shrinks with traffic without losing a trace, an
+    observation, or an in-flight Future.
   * ``GenerationPublisher`` — the sink a central ``OnlineRefitter``
     publishes through: every replica receives each ``ModelGeneration``
     and applies it at its own tick boundary (``AbacusServer``'s
@@ -45,6 +53,7 @@ import dataclasses
 import hashlib
 import os
 import threading
+import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -67,14 +76,17 @@ class HashRing:
     the later resharding step relies on).
     """
 
+    SPAN = 1 << 64  # hash space: first 8 bytes of SHA-256
+
     def __init__(self, names: Sequence[str], vnodes: int = 64):
         if not names:
             raise ValueError("HashRing needs at least one replica name")
         if len(set(names)) != len(names):
             raise ValueError("replica names must be unique")
+        self.names = [str(n) for n in names]
         self.vnodes = int(vnodes)
         points: List[Tuple[int, str]] = []
-        for name in names:
+        for name in self.names:
             for v in range(self.vnodes):
                 points.append((self._point(f"{name}#{v}"), name))
         points.sort()
@@ -92,9 +104,67 @@ class HashRing:
         idx = bisect.bisect_right(self._hashes, self._point(str(key)))
         return self._names[idx % len(self._names)]
 
+    def _owner_after(self, point: int) -> str:
+        """Owner of the arc just clockwise of ``point``."""
+        idx = bisect.bisect_right(self._hashes, point)
+        return self._names[idx % len(self._names)]
+
     def table(self, keys: Sequence[str]) -> Dict[str, str]:
         """key -> owner for a batch of keys (debug / stability tests)."""
         return {k: self.route(k) for k in keys}
+
+    @staticmethod
+    def diff(old: "HashRing", new: "HashRing") -> "RingDiff":
+        """Exact ownership delta between two rings (see ``RingDiff``)."""
+        return RingDiff(old, new)
+
+
+class RingDiff:
+    """Ownership delta between two ``HashRing`` memberships.
+
+    Computed by sweeping the union of both rings' vnode points: every
+    arc between consecutive points has one owner per ring, so the set
+    of arcs whose owner changed IS the moved keyspace — exact in
+    measure, no key sampling. ``sources`` are the replicas that lose
+    keyspace (the ones a reshard must quiesce), ``dests`` the ones that
+    gain it, and ``moved_fraction`` the fraction of the hash space that
+    changes hands (~1/N for one replica added to N, the
+    consistent-hashing bound; 1.0 would be a naive full rehash).
+
+    ``moves(keys)`` classifies concrete keys by re-routing each through
+    both rings — the per-key delta migration acts on.
+    """
+
+    def __init__(self, old: HashRing, new: HashRing):
+        self.old, self.new = old, new
+        self.added = [n for n in new.names if n not in old.names]
+        self.removed = [n for n in old.names if n not in new.names]
+        self.sources: set = set()
+        self.dests: set = set()
+        points = sorted(set(old._hashes) | set(new._hashes))
+        moved = 0
+        for i, point in enumerate(points):
+            nxt = points[(i + 1) % len(points)]
+            length = (nxt - point) % HashRing.SPAN or HashRing.SPAN
+            was, now = old._owner_after(point), new._owner_after(point)
+            if was != now:
+                moved += length
+                self.sources.add(was)
+                self.dests.add(now)
+        self.moved_fraction = moved / HashRing.SPAN
+
+    def moves(self, keys: Sequence[str]) -> Dict[str, Tuple[str, str]]:
+        """key -> (old owner, new owner) for keys whose owner changed."""
+        out: Dict[str, Tuple[str, str]] = {}
+        for k in keys:
+            was, now = self.old.route(k), self.new.route(k)
+            if was != now:
+                out[k] = (was, now)
+        return out
+
+    def kept(self, keys: Sequence[str]) -> List[str]:
+        """Keys whose owner is identical under both rings."""
+        return [k for k in keys if self.old.route(k) == self.new.route(k)]
 
 
 class GatewayReplica(AbacusServer):
@@ -126,6 +196,14 @@ class GenerationPublisher:
     guarantee), so a publish under load never mixes generations within
     any replica's micro-batch. A failing replica is counted, never
     allowed to swallow the generation for the others.
+
+    Membership is mutable (``set_replicas``: live resharding adds and
+    removes gateways under load); each broadcast iterates over a
+    snapshot of the list taken at publish time, so a membership change
+    mid-``publish_generation`` can neither skip a replica of the
+    snapshot nor corrupt the success accounting — the joining replica
+    simply catches the *next* generation (resharding seeds it with the
+    current one before it serves).
     """
 
     def __init__(self, replicas: Sequence[AbacusServer]):
@@ -136,9 +214,17 @@ class GenerationPublisher:
         self.last_generation: Optional[int] = None
         self._lock = threading.Lock()
 
+    def set_replicas(self, replicas: Sequence[AbacusServer]) -> None:
+        """Swap the broadcast membership (in-flight publishes keep
+        the snapshot they started with)."""
+        with self._lock:
+            self.replicas = list(replicas)
+
     def publish_generation(self, gen) -> bool:
+        with self._lock:
+            replicas = list(self.replicas)  # snapshot: membership may move
         ok = 0
-        for replica in self.replicas:
+        for replica in replicas:
             try:
                 replica.publish_generation(gen)
                 ok += 1
@@ -149,7 +235,7 @@ class GenerationPublisher:
             self.published += 1
             self.deliveries += ok
             self.last_generation = int(gen.number)
-        return ok == len(self.replicas)
+        return ok == len(replicas)
 
     def info(self) -> Dict:
         with self._lock:
@@ -229,40 +315,74 @@ class ClusterFrontend:
                  tracer=trace_query, vnodes: int = 64,
                  service_kw: Optional[Dict] = None,
                  replicas: Optional[Sequence[GatewayReplica]] = None,
+                 reshard_timeout: float = 30.0,
                  **server_kw):
+        # construction recipe, kept so live resharding can mint replicas
+        self._abacus = abacus
+        self._trace_root = trace_root
+        self._feedback_root = feedback_root
+        self._tracer = tracer
+        self._vnodes = int(vnodes)
+        self._service_kw = service_kw
+        self._server_kw = server_kw
         if replicas is not None:
             self.replicas = list(replicas)
         else:
             if abacus is None:
                 raise ValueError("pass a fitted abacus or explicit replicas")
-            self.replicas = []
-            for i in range(int(n_replicas)):
-                name = f"r{i}"
-                store = (TraceStore(os.path.join(trace_root, name))
-                         if trace_root else None)
-                feedback = (FeedbackStore(os.path.join(feedback_root, name))
-                            if feedback_root else None)
-                self.replicas.append(GatewayReplica(
-                    name, abacus, store=store, feedback=feedback,
-                    tracer=tracer, service_kw=service_kw, **server_kw))
+            self.replicas = [self._build_replica(f"r{i}")
+                             for i in range(int(n_replicas))]
         if not self.replicas:
             raise ValueError("ClusterFrontend needs at least one replica")
         self._by_name = {r.name: r for r in self.replicas}
         self.ring = HashRing([r.name for r in self.replicas], vnodes=vnodes)
+        # routing state (ring/membership) swaps atomically under one
+        # lock at reshard cutover; submits that raced a cutover park on
+        # the condition and replay once the epoch moves.
+        self._route_lock = threading.RLock()
+        self._cutover = threading.Condition(self._route_lock)
+        self._epoch = 0
+        self._resharding = False
+        self._draining: set = set()   # replica names quiesced mid-reshard
+        self._started = False
+        self.reshard_timeout = float(reshard_timeout)
+        self.reshard_stats = {"reshards": 0, "keys_moved": 0,
+                              "units_moved": 0, "keys_skipped": 0,
+                              "keys_replayed": 0, "cutover_ticks": 0}
         # central (federated) feedback store: the refitter's input
         self.feedback = (FeedbackStore(os.path.join(feedback_root, "central"))
                          if feedback_root else None)
         self.refitter: Optional[OnlineRefitter] = None
         self.publisher: Optional[GenerationPublisher] = None
 
+    def _build_replica(self, name: str) -> GatewayReplica:
+        """Mint one homogeneous replica from the construction recipe."""
+        if self._abacus is None:
+            raise ValueError(
+                "this frontend wraps pre-built replicas; pass a "
+                "GatewayReplica object instead of a bare name")
+        store = (TraceStore(os.path.join(self._trace_root, name))
+                 if self._trace_root else None)
+        feedback = (FeedbackStore(os.path.join(self._feedback_root, name))
+                    if self._feedback_root else None)
+        return GatewayReplica(name, self._abacus, store=store,
+                              feedback=feedback, tracer=self._tracer,
+                              service_kw=self._service_kw, **self._server_kw)
+
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "ClusterFrontend":
-        for r in self.replicas:
+        with self._route_lock:
+            self._started = True
+            replicas = list(self.replicas)
+        for r in replicas:
             r.start()
         return self
 
     def stop(self, timeout: Optional[float] = 10.0) -> None:
-        for r in self.replicas:
+        with self._route_lock:
+            self._started = False
+            replicas = list(self.replicas)
+        for r in replicas:
             r.stop(timeout)
 
     def __enter__(self) -> "ClusterFrontend":
@@ -277,38 +397,93 @@ class ClusterFrontend:
 
     # -- routing ------------------------------------------------------------
     def replica_for(self, fingerprint: str) -> GatewayReplica:
-        return self._by_name[self.ring.route(fingerprint)]
+        with self._route_lock:
+            return self._by_name[self.ring.route(fingerprint)]
 
     def route(self, cfg) -> Tuple[str, GatewayReplica]:
         """(fingerprint, owning replica) for one config."""
         fp = config_fingerprint(cfg)
         return fp, self.replica_for(fp)
 
+    def _await_cutover(self, epoch: int, deadline: float) -> None:
+        """Park until the routing epoch moves past ``epoch`` (replay).
+
+        Called with ``_route_lock`` held (the condition shares it, so
+        waiting releases the lock). A query that raced a reshard —
+        routed to a replica whose worker is quiesced — waits here for
+        the cutover and is then re-routed through the NEW ring:
+        ``Query.fp`` is already computed, so the replay is one dict
+        lookup, not a re-hash.
+        """
+        # a failed/aborted reshard also wakes us (_resharding drops):
+        # the retry then surfaces the replica's real error instead of
+        # parking forever on a cutover that will never come.
+        if not self._cutover.wait_for(
+                lambda: self._epoch != epoch or not self._resharding,
+                timeout=deadline - time.monotonic()):
+            raise RuntimeError("reshard cutover did not complete within "
+                               f"{self.reshard_timeout}s; query not replayed")
+
     # -- client API ---------------------------------------------------------
     def submit(self, cfg, batch: int, seq: int) -> Future:
         """Route one query to its shard; fingerprint computed ONCE here."""
-        fp, replica = self.route(cfg)
-        return replica.submit(cfg, batch, seq, fp=fp)
+        fp = config_fingerprint(cfg)
+        deadline = time.monotonic() + self.reshard_timeout
+        parked = False
+        while True:
+            with self._route_lock:
+                epoch = self._epoch
+                replica = self._by_name[self.ring.route(fp)]
+                try:
+                    fut = replica.submit(cfg, batch, seq, fp=fp)
+                    if parked:  # counted once per query, not per wakeup
+                        self.reshard_stats["keys_replayed"] += 1
+                    return fut
+                except RuntimeError:
+                    if not self._resharding:
+                        raise  # genuinely stopped, not a racing cutover
+                    self._await_cutover(epoch, deadline)
+                    parked = True
 
     def submit_many(self, queries: Sequence) -> List[Future]:
         """Fan a wave out: one enqueue (-> one tick wake) per replica.
 
         Futures come back in input order; each replica's worker
         coalesces its whole partition into one concurrent micro-batch.
+        A partition routed to a replica that a concurrent reshard
+        quiesced parks until the cutover, then replays through the new
+        ring — every submitted query resolves to exactly one Future.
         """
         qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
         qs = [q if q.fp is not None
               else dataclasses.replace(q, fp=config_fingerprint(q.cfg))
               for q in qs]
         futs: List[Optional[Future]] = [None] * len(qs)
-        parts: Dict[str, Tuple[List[int], List[Query]]] = {}
-        for i, q in enumerate(qs):
-            idxs, part = parts.setdefault(self.ring.route(q.fp), ([], []))
-            idxs.append(i)
-            part.append(q)
-        for name, (idxs, part) in parts.items():
-            for i, fut in zip(idxs, self._by_name[name].submit_many(part)):
-                futs[i] = fut
+        pending = list(range(len(qs)))
+        parked: set = set()        # queries that raced a cutover, deduped
+        deadline = time.monotonic() + self.reshard_timeout
+        while pending:
+            with self._route_lock:
+                epoch = self._epoch
+                parts: Dict[str, List[int]] = {}
+                for i in pending:
+                    parts.setdefault(self.ring.route(qs[i].fp), []).append(i)
+                raced: List[int] = []
+                for name, idxs in parts.items():
+                    try:
+                        for i, fut in zip(idxs, self._by_name[name]
+                                          .submit_many([qs[i] for i in idxs])):
+                            futs[i] = fut
+                    except RuntimeError:
+                        if not self._resharding:
+                            raise
+                        raced.extend(idxs)
+                pending = raced
+                if pending:
+                    parked.update(pending)
+                    self._await_cutover(epoch, deadline)
+                elif parked:  # counted once per query, not per wakeup
+                    self.reshard_stats["keys_replayed"] += len(parked)
         return futs  # type: ignore[return-value]
 
     def predict_one(self, cfg, batch: int, seq: int,
@@ -319,6 +494,232 @@ class ClusterFrontend:
                      timeout: Optional[float] = None) -> List[Dict]:
         return [f.result(timeout) for f in self.submit_many(queries)]
 
+    # -- live resharding ----------------------------------------------------
+    def add_replica(self, replica) -> Dict:
+        """Grow the fleet by one gateway, migrating its slice to it live.
+
+        ``replica`` is a bare name (a homogeneous replica is minted from
+        the construction recipe) or a pre-built ``GatewayReplica``. The
+        joiner adopts the fleet's current ``ModelGeneration`` before it
+        serves a single query. Returns the migration summary.
+        """
+        prebuilt: Dict[str, GatewayReplica] = {}
+        if isinstance(replica, GatewayReplica):
+            prebuilt[replica.name] = replica
+            name = replica.name
+        else:
+            name = str(replica)
+
+        def plan(old_names):
+            if name in old_names:
+                raise ValueError(f"replica {name!r} already in the fleet")
+            return old_names + [name]
+
+        return self._reshard(plan, prebuilt)
+
+    def remove_replica(self, name: str) -> Dict:
+        """Shrink the fleet by one gateway: drain it, migrate its
+        ``TraceStore``/``FeedbackStore`` slices to the new owners, cut
+        the ring over. Every query queued on it resolves (the drain
+        serves them); queries racing the cutover replay to new owners.
+        """
+        name = str(name)
+
+        def plan(old_names):
+            if name not in old_names:
+                raise ValueError(f"no replica named {name!r}")
+            if len(old_names) == 1:
+                raise ValueError("cannot remove the last replica")
+            return [n for n in old_names if n != name]
+
+        return self._reshard(plan)
+
+    def resize(self, n_replicas: int) -> Dict:
+        """Reshard the fleet to ``n_replicas`` gateways in ONE protocol
+        pass (one drain, one migration, one cutover — not N single-step
+        reshards). Growth mints ``r<i>`` replicas from the construction
+        recipe; shrink retires the most recently added gateways.
+        """
+        n = int(n_replicas)
+        if n < 1:
+            raise ValueError("a fleet needs at least one replica")
+
+        def plan(old_names):
+            if n <= len(old_names):
+                return old_names[:n]
+            names, i = list(old_names), 0
+            while len(names) < n:
+                if f"r{i}" not in names:
+                    names.append(f"r{i}")
+                i += 1
+            return names
+
+        return self._reshard(plan)
+
+    def _current_generation(self):
+        """(abacus, generation) snapshot of the newest replica."""
+        newest = max(self.replicas, key=lambda r: r.service.generation)
+        return newest.service.snapshot()
+
+    @staticmethod
+    def _slices(replica: GatewayReplica):
+        """The migratable stores of one replica, tagged by kind."""
+        return (("trace", replica.service.store),
+                ("feedback", replica.feedback))
+
+    def _reshard(self, plan,
+                 prebuilt: Optional[Dict[str, GatewayReplica]] = None) -> Dict:
+        """Drain -> migrate -> cutover to the membership ``plan`` names.
+
+        ``plan(old_names) -> new_names`` runs AFTER the single-reshard
+        guard is taken, so concurrent admin calls always compute (and
+        validate) against the membership they will actually change —
+        never a stale snapshot an overlapping reshard just replaced.
+
+        1. **drain**: quiesce ONLY the affected replicas — the ones the
+           ring diff says lose keyspace (``RingDiff.sources``) plus the
+           leavers — by stopping their workers (queued queries are
+           served before the worker exits, so every in-flight Future
+           resolves). Unaffected replicas keep ticking throughout. A
+           replica still draining past the timeout ABORTS the reshard
+           (migrating under a live writer would orphan its last ticks'
+           keys); the abort restarts whatever quiesced, and a retry
+           succeeds once the stuck worker exits.
+        2. **migrate**: each quiesced replica hands exactly its moved
+           ``TraceStore``/``FeedbackStore`` keys to their new owners via
+           ``JsonFileStore.split`` (the commutative merge contract — a
+           destination that cold-traced a moved key mid-migration
+           converges, never conflicts). Key sets are computed AFTER the
+           drain, so records written by the final ticks migrate too. A
+           migration failure (e.g. disk full) restarts the drained
+           survivors on the OLD ring and re-raises; retrying the same
+           reshard completes the handoff (split/merge converge).
+        3. **cutover**: atomically swap ring + membership, restart the
+           quiesced survivors, start the joiners (already seeded with
+           the fleet's current generation), bump the routing epoch, and
+           wake every parked query for replay. Publisher and refitter
+           membership follow.
+        """
+        with self._route_lock:
+            if self._resharding:
+                raise RuntimeError("a reshard is already in progress")
+            self._resharding = True
+            old_names = [r.name for r in self.replicas]
+        drained: List[GatewayReplica] = []
+        try:
+            names = [str(n) for n in plan(old_names)]
+            if not names:
+                raise ValueError("a fleet needs at least one replica")
+            summary = {"from": old_names, "to": names, "keys_moved": 0,
+                       "units_moved": 0, "keys_skipped": 0,
+                       "cutover_ticks": 0, "trace_keys_moved": 0,
+                       "feedback_keys_moved": 0}
+            new_ring = HashRing(names, vnodes=self._vnodes)
+            diff = HashRing.diff(self.ring, new_ring)
+            summary["moved_fraction_bound"] = diff.moved_fraction
+            joiners = {n: (prebuilt or {}).get(n) or self._build_replica(n)
+                       for n in names if n not in self._by_name}
+            # joiners adopt the fleet's CURRENT generation before serving
+            abacus, generation = self._current_generation()
+            for rep in joiners.values():
+                if generation > rep.service.generation:
+                    rep.service.adopt(abacus, generation)
+            # 1) drain the affected replicas (keyspace losers + leavers)
+            affected = [self._by_name[n] for n in old_names
+                        if n in diff.sources or n not in names]
+            with self._route_lock:
+                self._draining = {r.name for r in affected}
+            ticks_before = sum(r.stats.ticks for r in affected)
+            drained = [r for r in affected if r.running]
+            for r in drained:
+                r.stop(timeout=self.reshard_timeout)
+            # verify EVERY affected worker is gone (including one still
+            # draining from a previously aborted reshard): migration
+            # must never run concurrently with a live writer.
+            stuck = [r.name for r in affected if r.draining]
+            if stuck:
+                raise RuntimeError(
+                    f"replicas {stuck} did not drain within "
+                    f"{self.reshard_timeout}s; reshard aborted (retry "
+                    "once their in-flight micro-batches finish)")
+            summary["cutover_ticks"] = (sum(r.stats.ticks for r in affected)
+                                        - ticks_before)
+            # 2) migrate: hand exactly the moved slices to the new owners
+            owners = {**self._by_name, **joiners}
+            for src in affected:
+                for which, src_store in self._slices(src):
+                    if src_store is None:
+                        continue
+                    by_dest: Dict[str, List] = {}
+                    for key in src_store.keys():
+                        owner = new_ring.route(key[0])
+                        if owner != src.name:
+                            by_dest.setdefault(owner, []).append(key)
+                    for owner, keys in sorted(by_dest.items()):
+                        dest_store = dict(
+                            self._slices(owners[owner]))[which]
+                        if dest_store is None:
+                            summary["keys_skipped"] += len(keys)
+                            continue
+                        res = src_store.split(keys, dest_store)
+                        summary["keys_moved"] += res["moved"]
+                        summary[f"{which}_keys_moved"] += res["moved"]
+                        summary["units_moved"] += res["units"]
+                        summary["keys_skipped"] += res["skipped"]
+            # 3) cutover: swap the ring atomically, wake parked queries
+            self._cutover_swap(names, new_ring, joiners)
+        except BaseException:
+            # any failure before the cutover leaves the OLD ring in
+            # place: the quiesced survivors must serve again, or their
+            # shards would reject every query until a manual restart.
+            if self._started:
+                for r in drained:
+                    try:
+                        r.start()
+                    except RuntimeError:
+                        pass  # still draining: it finishes on its own
+            raise
+        finally:
+            with self._route_lock:
+                self._resharding = False
+                self._draining = set()
+                self._cutover.notify_all()  # never strand a parked query
+        for k in ("keys_moved", "units_moved", "keys_skipped",
+                  "cutover_ticks"):
+            self.reshard_stats[k] += summary[k]
+        self.reshard_stats["reshards"] += 1
+        return summary
+
+    def _cutover_swap(self, names: Sequence[str], new_ring: HashRing,
+                      joiners: Dict[str, GatewayReplica]) -> None:
+        """Atomic membership + ring swap; restarts quiesced gateways.
+
+        Everything a router can observe — ``replicas``, ``_by_name``,
+        ``ring``, the running state of every member — changes under ONE
+        ``_route_lock`` hold, then the epoch bump releases every query
+        parked on the cutover condition to re-route through the new
+        ring. (Separated from ``_reshard`` so crash tests can fail the
+        protocol precisely between migrate and cutover.)
+        """
+        with self._route_lock:
+            self.replicas = [joiners.get(n) or self._by_name[n]
+                             for n in names]
+            self._by_name = {r.name: r for r in self.replicas}
+            self.ring = new_ring
+            self._draining = set()
+            if self._started:
+                for r in self.replicas:
+                    if not r.running:
+                        r.start()
+            self._epoch += 1
+            self._cutover.notify_all()
+        if self.publisher is not None:
+            self.publisher.set_replicas(self.replicas)
+        if self.refitter is not None:
+            self.refitter.set_sources(
+                [r.feedback for r in self.replicas
+                 if r.feedback is not None])
+
     # -- feedback loop ------------------------------------------------------
     def observe(self, cfg, batch: int, seq: int, time_s: float,
                 mem_bytes: float, **kw) -> None:
@@ -327,11 +728,33 @@ class ClusterFrontend:
         The observation lands in the owning replica's ``FeedbackStore``
         slice (and its calibration window); the central refitter pulls
         it on its next federated sync. ``notify()`` keeps that sync
-        prompt without the frontend doing any merging inline.
+        prompt without the frontend doing any merging inline. An
+        observation racing a reshard of its owner parks until the
+        cutover and lands in the NEW owner's slice. The file write
+        itself happens OUTSIDE the routing lock (submits never stall
+        behind disk I/O); if the written replica was *removed* from
+        the fleet mid-write — its slice already handed off — the
+        observation is re-delivered to the current owner (a surviving
+        member's slice stays a refitter source, so only removal needs
+        the retry; the rare duplicate this can add is benign, lost
+        feedback would not be).
         """
         fp = kw.pop("fp", None) or config_fingerprint(cfg)
-        self.replica_for(fp).observe(cfg, batch, seq, time_s, mem_bytes,
-                                     fp=fp, **kw)
+        deadline = time.monotonic() + self.reshard_timeout
+        redeliveries = 0
+        while True:
+            with self._route_lock:
+                name = self.ring.route(fp)
+                if name in self._draining:
+                    self._await_cutover(self._epoch, deadline)
+                    continue                  # parked; re-route fresh
+                replica = self._by_name[name]
+            replica.observe(cfg, batch, seq, time_s, mem_bytes, fp=fp, **kw)
+            with self._route_lock:
+                if (self._by_name.get(replica.name) is replica
+                        or redeliveries >= 3):
+                    break                     # still a member: durable
+            redeliveries += 1
         if self.refitter is not None:
             self.refitter.notify()
 
@@ -392,12 +815,14 @@ class ClusterFrontend:
         return fleet
 
     def stats(self) -> Dict:
-        """Fleet-wide view: summed counters, merged calibration, refit."""
+        """Fleet-wide view: summed counters, merged calibration, refit,
+        and the lifetime resharding/migration counters."""
         per = {r.name: r.stats() for r in self.replicas}
         fleet = self._sum_counters(per)
         out = {
             "replicas": len(self.replicas),
             "fleet": fleet,
+            "reshard": dict(self.reshard_stats),
             "generations": sorted({r.service.generation
                                    for r in self.replicas}),
             "calibration": merge_calibration(

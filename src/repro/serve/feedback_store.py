@@ -141,6 +141,10 @@ class FeedbackStore(JsonFileStore):
             if self._total is not None:
                 self._total += n_new
 
+    def _on_split(self, n_removed: int) -> None:
+        with self._lock:
+            self._total = None  # whole key files left: recount lazily
+
     # -- writes -------------------------------------------------------------
     def add(self, key: StoreKey, time_s: float, mem_bytes: float,
             generation: Optional[int] = None, job_id: str = "",

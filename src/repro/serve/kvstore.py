@@ -26,6 +26,11 @@ corrupt-counting paths — exactly the drift a shared base exists to stop.
     sequence of cross-host merges converge to one fixed point — the
     primitive the multi-host fabric (``repro.serve.cluster``) is built
     on.
+  * **``extract`` / ``split``** — key-predicate slice handoff: a shard
+    can read (``extract``) or *move* (``split``) exactly one set of
+    keys into another store, through the same ``_merge_raw`` contract,
+    so live resharding inherits merge's convergence and corrupt-skip
+    guarantees instead of reinventing a copy path.
 
 Subclasses define the value: ``VALUE_FIELD`` names the payload slot
 (kept distinct per store so pre-refactor files still load),
@@ -40,7 +45,7 @@ import os
 import tempfile
 import threading
 import time
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 StoreKey = Tuple[str, int, int]  # (config fingerprint, batch, seq)
 
@@ -127,6 +132,9 @@ class JsonFileStore:
     def _on_merge(self, key: StoreKey, n_new: int) -> None:
         """Called after ``merge`` imported ``n_new`` units for ``key``."""
 
+    def _on_split(self, n_removed: int) -> None:
+        """Called after ``split`` removed ``n_removed`` key files."""
+
     # -- load / save --------------------------------------------------------
     def _load_payload(self, path: str) -> Optional[Dict]:
         """Parsed, validated payload for one key file, or None.
@@ -210,18 +218,73 @@ class JsonFileStore:
         is commutative and idempotent, ``a.merge(b); a.merge(c)`` yields
         the same contents in any order — the property federated
         multi-host aggregation relies on. Returns how many units
-        (records / observations) were new to this store.
+        (records / observations) were new to this store. (``split`` is
+        the slice-restricted counterpart: it loads exactly its keys via
+        ``get_raw`` instead of scanning the whole directory.)
         """
         imported = 0
         for key, theirs in other.iter_raw():
-            with self._lock:
-                mine = self.get_raw(key)
-                merged, n_new = self._merge_raw(mine, theirs)
-                if n_new:
-                    self.put_raw(key, merged)
-                    self._on_merge(key, n_new)
-            imported += n_new
+            imported += self._merge_one(key, theirs)
         return imported
+
+    def _merge_one(self, key: StoreKey, theirs) -> int:
+        """Union one foreign value into this store (merge contract)."""
+        with self._lock:
+            mine = self.get_raw(key)
+            merged, n_new = self._merge_raw(mine, theirs)
+            if n_new:
+                self.put_raw(key, merged)
+                self._on_merge(key, n_new)
+        return n_new
+
+    # -- slice handoff (live resharding) ------------------------------------
+    def extract(self, keys: Iterable[StoreKey]) -> Dict[StoreKey, Dict]:
+        """Validated values for exactly ``keys`` (unloadable ones skipped).
+
+        Read-only companion to ``split``: corrupt/foreign files in the
+        slice are counted via ``_note_corrupt`` and omitted, never
+        raised — the same skip semantics as every other read path.
+        """
+        out: Dict[StoreKey, Dict] = {}
+        for key in keys:
+            raw = self.get_raw(key)
+            if raw is not None:
+                out[key] = raw
+        return out
+
+    def split(self, keys: Iterable[StoreKey],
+              into: "JsonFileStore") -> Dict[str, int]:
+        """Move exactly ``keys`` from this store into ``into``.
+
+        Each key's value is handed off through ``into``'s merge contract
+        (so a destination that raced ahead and already holds a value for
+        the key converges exactly as a cross-host merge would), then the
+        local file is removed — the handoff is copy-then-delete, never a
+        window with zero owners on disk. Keys whose local file is
+        missing or unloadable are skipped (counted via
+        ``_note_corrupt`` by the shared load path) and *left in place*:
+        a corrupt file is dead to every reader anyway and ``compact``
+        reclaims it; migration never raises because of one.
+
+        Returns ``{"moved": files removed here, "units": units new to
+        the destination, "skipped": keys with no loadable file}``.
+        """
+        moved = units = skipped = 0
+        for key in keys:
+            with self._lock:
+                raw = self.get_raw(key)
+            if raw is None:
+                skipped += 1
+                continue
+            units += into._merge_one(key, raw)
+            try:
+                os.unlink(self.path_for(key))
+                moved += 1
+            except OSError:
+                pass  # a concurrent compact/clear got there first
+        if moved:
+            self._on_split(moved)
+        return {"moved": moved, "units": units, "skipped": skipped}
 
     # -- compaction ---------------------------------------------------------
     def compact(self, max_age_s: Optional[float] = None,

@@ -170,6 +170,17 @@ class OnlineRefitter:
             self._stuck_at = None  # fresh signal: a retry may now progress
             self._cond.notify_all()
 
+    def set_sources(self, sources: Sequence[FeedbackStore]) -> None:
+        """Swap the federated source list (live fleet resharding).
+
+        The change detector mark is reset so the next ``sync_sources``
+        scans unconditionally — a replica that just joined may carry
+        merged observations the old mark would wrongly skip.
+        """
+        with self._cond:
+            self.sources = list(sources or [])
+            self._source_mark = None
+
     def sync_sources(self, force: bool = False) -> int:
         """Federated merge: pull every source store into ``feedback``.
 

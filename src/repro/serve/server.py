@@ -163,6 +163,19 @@ class AbacusServer:
     def running(self) -> bool:
         return self._running
 
+    @property
+    def draining(self) -> bool:
+        """True while a stopped worker is still finishing its drain.
+
+        ``stop(timeout)`` can return before the worker exits (a slow
+        trace mid-tick); callers that need a *quiesced* server — the
+        reshard protocol migrates store slices only once writes ceased
+        — must check this, not just ``running``.
+        """
+        worker = self._worker
+        return (worker is not None and worker.is_alive()
+                and not self._running)
+
     # -- client API ---------------------------------------------------------
     def submit(self, cfg, batch: int, seq: int,
                fp: Optional[str] = None) -> Future:

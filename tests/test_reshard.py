@@ -1,0 +1,540 @@
+"""Elastic fleet resharding: ring diffs, slice migration, chaos/crash.
+
+Tier-1: ``HashRing.diff`` ownership-delta properties (via ``_hypo``,
+hypothesis-optional; CI re-runs this module under two random
+``PYTHONHASHSEED``s like the other cluster suites), the live drain ->
+migrate -> cutover protocol for ``add_replica``/``remove_replica``/
+``resize`` under concurrent submit load, corrupt-file chaos injection
+into a migrating slice, a crash between migrate and cutover rebuilt
+from the on-disk stores, and the ``GenerationPublisher`` mid-publish
+membership regression.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.serve import (AbacusServer, ClusterFrontend, GatewayReplica,
+                         GenerationPublisher, HashRing, ModelGeneration,
+                         PredictionService, RingDiff, TraceStore,
+                         config_fingerprint)
+
+from test_cluster import _fleet, _grid, _verdict
+from test_prediction_service import _abacus, _counting_tracer, _fake_cfg
+from test_trace_store import _record
+
+
+def _keys(n=256):
+    return [f"{i:032x}" for i in range(n)]
+
+
+def _owned_keys(fleet):
+    """replica name -> stored trace keys (the on-disk slice)."""
+    return {r.name: sorted(r.service.store.keys()) for r in fleet.replicas}
+
+
+def _assert_slices_owned(fleet):
+    """Every stored trace/feedback key sits on the replica that owns it."""
+    for r in fleet.replicas:
+        if r.service.store is not None:
+            for k in r.service.store.keys():
+                assert fleet.ring.route(k[0]) == r.name, (r.name, k)
+        if r.feedback is not None:
+            for k, _ in r.feedback.items():
+                assert fleet.ring.route(k[0]) == r.name, ("fb", r.name, k)
+
+
+# -- HashRing.diff: ownership-delta properties --------------------------------
+
+
+@settings(max_examples=15)
+@given(st.integers(min_value=2, max_value=7),
+       st.integers(min_value=0, max_value=3),
+       st.integers(min_value=0, max_value=10_000))
+def test_diff_partitions_keys_and_never_routes_to_departed(n_old, n_add,
+                                                           seed):
+    """For ANY membership change: (moved | kept) covers every key with
+    no overlap, moves agree with per-ring routing, and no key — moved
+    or kept — maps to a departed replica under the new ring."""
+    rng = np.random.default_rng(seed)
+    old_names = [f"n{i}" for i in range(n_old)]
+    removed = list(rng.choice(old_names, size=int(rng.integers(0, n_old)),
+                              replace=False))
+    new_names = ([n for n in old_names if n not in removed]
+                 + [f"a{i}" for i in range(n_add)])
+    if not new_names:
+        new_names = old_names[:1]
+        removed = old_names[1:]
+    old = HashRing(old_names, vnodes=32)
+    new = HashRing(new_names, vnodes=32)
+    diff = HashRing.diff(old, new)
+    assert isinstance(diff, RingDiff)
+    assert sorted(diff.removed) == sorted(removed)
+    assert diff.added == [n for n in new_names if n not in old_names]
+    keys = _keys(200)
+    moves, kept = diff.moves(keys), diff.kept(keys)
+    assert set(moves) | set(kept) == set(keys)          # partition...
+    assert not set(moves) & set(kept)                   # ...no overlap
+    for k, (src, dst) in moves.items():
+        assert src == old.route(k) and dst == new.route(k) and src != dst
+        assert src in diff.sources and dst in diff.dests
+        assert dst not in removed
+    for k in kept:
+        owner = new.route(k)
+        assert owner == old.route(k) and owner not in removed
+
+
+@settings(max_examples=8)
+@given(st.integers(min_value=2, max_value=10))
+def test_diff_single_change_stays_near_the_1_over_n_bound(n):
+    """Adding one replica to N moves ~1/(N+1) of the keyspace (vnode
+    imbalance bounded at ~2.5x), all of it INTO the joiner; removal is
+    the exact mirror (same arcs, sources/dests swapped)."""
+    old = HashRing([f"r{i}" for i in range(n)], vnodes=64)
+    new = HashRing([f"r{i}" for i in range(n + 1)], vnodes=64)
+    grow = HashRing.diff(old, new)
+    ideal = 1.0 / (n + 1)
+    assert 0.0 < grow.moved_fraction <= 2.5 * ideal, grow.moved_fraction
+    assert grow.dests == {f"r{n}"} and grow.sources <= set(old.names)
+    shrink = HashRing.diff(new, old)
+    assert shrink.moved_fraction == pytest.approx(grow.moved_fraction)
+    assert shrink.sources == {f"r{n}"} and shrink.dests <= set(old.names)
+
+
+def test_diff_moved_fraction_matches_sampled_keys():
+    """The arc-sweep keyspace measure agrees with brute-force routing
+    of a large key sample (the measure is exact; sampling wobbles)."""
+    diff = HashRing.diff(HashRing([f"r{i}" for i in range(4)]),
+                         HashRing([f"r{i}" for i in range(8)]))
+    keys = _keys(4096)
+    sampled = len(diff.moves(keys)) / len(keys)
+    assert abs(sampled - diff.moved_fraction) < 0.05
+    assert diff.moved_fraction < 0.60                  # vs naive 100%
+
+
+def test_diff_identical_rings_move_nothing():
+    ring = HashRing(["a", "b", "c"])
+    diff = HashRing.diff(ring, HashRing(["a", "b", "c"]))
+    assert diff.moved_fraction == 0.0
+    assert not diff.sources and not diff.dests
+    assert diff.moves(_keys(64)) == {}
+
+
+# -- kvstore slice handoff ----------------------------------------------------
+
+
+def test_split_moves_exact_slice_and_skips_damage(tmp_path):
+    """``split`` hands exactly the requested keys to the destination
+    through the merge contract; corrupt/foreign/missing files are
+    skipped (counted), left in place, and never raise."""
+    src = TraceStore(str(tmp_path / "src"))
+    dst = TraceStore(str(tmp_path / "dst"))
+    keys = [("aa" * 8, 2, 32), ("bb" * 8, 4, 32), ("cc" * 8, 2, 64)]
+    for k in keys:
+        src.put(k, _record(batch=k[1], seq=k[2]))
+    with open(src.path_for(keys[0]), "w") as f:
+        f.write("{not json")                       # unparseable
+    with open(src.path_for(keys[1])) as f:
+        payload = json.load(f)
+    payload["version"] = 99                        # foreign schema
+    with open(src.path_for(keys[1]), "w") as f:
+        json.dump(payload, f)
+    res = src.split(keys + [("dd" * 8, 2, 32)], dst)   # + a missing key
+    assert res == {"moved": 1, "units": 1, "skipped": 3}
+    assert list(dst.keys()) == [keys[2]]
+    assert dst.get(keys[2]) is not None
+    assert src.stats.corrupt >= 2
+    assert src.get(keys[2]) is None                # healthy key moved out
+    # extract mirrors the same skip semantics, read-only
+    assert list(src.extract(keys)) == []
+    assert list(dst.extract(keys)) == [keys[2]]
+
+
+def test_split_converges_when_destination_raced_ahead(tmp_path):
+    """A destination that already traced a moved key (cold query racing
+    the migration) converges through ``_merge_raw`` — one deterministic
+    winner, no duplicate, no error."""
+    src = TraceStore(str(tmp_path / "src"))
+    dst = TraceStore(str(tmp_path / "dst"))
+    key = ("ee" * 8, 2, 32)
+    src.put(key, _record("same", batch=2, seq=32))
+    dst.put(key, _record("same", batch=2, seq=32))
+    assert src.split([key], dst) == {"moved": 1, "units": 0, "skipped": 0}
+    assert dst.get(key) is not None and src.get(key) is None
+
+
+# -- live resharding: grow ----------------------------------------------------
+
+
+def test_add_replica_migrates_exactly_the_moved_slice(tmp_path):
+    fleet = _fleet(3, tmp_path)
+    queries = _grid()
+    with fleet:
+        pre = fleet.predict_many(queries)
+        stored = _owned_keys(fleet)
+        old_ring = fleet.ring
+        mig = fleet.add_replica("r3")
+        expected = {k for ks in stored.values() for k in ks
+                    if fleet.ring.route(k[0]) != old_ring.route(k[0])}
+        assert mig["trace_keys_moved"] == len(expected)
+        assert set(fleet._by_name["r3"].service.store.keys()) == {
+            k for k in expected if fleet.ring.route(k[0]) == "r3"}
+        _assert_slices_owned(fleet)
+        post = fleet.predict_many(queries)
+    assert [_verdict(e) for e in pre] == [_verdict(e) for e in post]
+    assert [r.name for r in fleet.replicas] == ["r0", "r1", "r2", "r3"]
+    assert fleet.ring.names == ["r0", "r1", "r2", "r3"]
+    assert fleet.stats()["reshard"]["reshards"] == 1
+
+
+def test_resize_grow_under_concurrent_load_resolves_every_future(tmp_path):
+    """Acceptance: live 4 -> 8 resize under concurrent submit load —
+    every in-flight Future resolves, zero failures, and post-reshard
+    estimates are identical to a fresh single ``AbacusServer``."""
+    queries = _grid()
+    with AbacusServer(PredictionService(
+            _abacus(), tracer=_counting_tracer([]))) as srv:
+        expected = sorted(_verdict(e) for e in srv.predict_many(queries))
+    fleet = _fleet(4, tmp_path)
+    with fleet:
+        fleet.predict_many(queries)
+        stop, errors, collected = threading.Event(), [], []
+        lock = threading.Lock()
+
+        def client(share):
+            while not stop.is_set():
+                try:
+                    got = [f.result(30) for f in fleet.submit_many(share)]
+                    with lock:
+                        collected.extend(got)
+                except Exception as e:  # pragma: no cover
+                    errors.append(e)
+                    return
+
+        threads = [threading.Thread(target=client, args=(queries[i::3],))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        mig = fleet.resize(8)
+        time.sleep(0.1)
+        stop.set()
+        for t in threads:
+            t.join(30)
+        assert not errors
+        post = fleet.predict_many(queries)
+    assert len(fleet.replicas) == 8
+    assert sorted(_verdict(e) for e in post) == expected
+    for est in collected:                     # racing waves also resolved
+        assert _verdict(est) in expected
+    assert fleet.server_info()["fleet"]["failed"] == 0
+    assert mig["moved_fraction_bound"] < 0.60
+    _assert_slices_owned(fleet)
+
+
+# -- live resharding: shrink --------------------------------------------------
+
+
+def test_remove_replicas_under_load_conserves_slices_and_feedback(tmp_path):
+    """Acceptance: live 8 -> 4 via ``remove_replica`` under concurrent
+    load — every Future resolves, estimates match a fresh single
+    server, and every trace/observation survives on its new owner."""
+    # 12 fingerprints: the retiring replicas (r4..r7) own several, so
+    # the shrink genuinely migrates slices (SHA-256 routing is fixed)
+    queries = _grid(names="abcdefghijkl", seqs=(32,))
+    with AbacusServer(PredictionService(
+            _abacus(), tracer=_counting_tracer([]))) as srv:
+        expected = sorted(_verdict(e) for e in srv.predict_many(queries))
+    fleet = _fleet(8, tmp_path)
+    with fleet:
+        ests = fleet.predict_many(queries)
+        for (cfg, b, s), est in zip(queries, ests):
+            fleet.observe(cfg, b, s, est["time_s"] * 2.0,
+                          est["memory_bytes"] * 1.5,
+                          predicted_time_s=est["time_s"],
+                          predicted_mem_bytes=est["memory_bytes"])
+        stop, errors = threading.Event(), []
+
+        def client(share):
+            while not stop.is_set():
+                try:
+                    for f in fleet.submit_many(share):
+                        f.result(30)
+                except Exception as e:  # pragma: no cover
+                    errors.append(e)
+                    return
+
+        threads = [threading.Thread(target=client, args=(queries[i::2],))
+                   for i in range(2)]
+        for t in threads:
+            t.start()
+        for name in ("r7", "r6", "r5", "r4"):
+            fleet.remove_replica(name)
+        stop.set()
+        for t in threads:
+            t.join(30)
+        assert not errors
+        post = fleet.predict_many(queries)
+    assert [r.name for r in fleet.replicas] == ["r0", "r1", "r2", "r3"]
+    assert sorted(_verdict(e) for e in post) == expected
+    _assert_slices_owned(fleet)
+    # every observation migrated with its slice: none lost, none doubled
+    total = sum(len(obs) for r in fleet.replicas
+                for _, obs in r.feedback.items())
+    assert total == len(queries)
+    stats = fleet.stats()["reshard"]
+    assert stats["reshards"] == 4 and stats["keys_moved"] > 0
+
+
+def test_reshard_guards_degenerate_requests(tmp_path):
+    fleet = _fleet(2, tmp_path)
+    with pytest.raises(ValueError):
+        fleet.add_replica("r0")               # duplicate name
+    with pytest.raises(ValueError):
+        fleet.remove_replica("nope")          # unknown name
+    with pytest.raises(ValueError):
+        fleet.resize(0)
+    fleet.remove_replica("r1")                # offline reshard is fine
+    with pytest.raises(ValueError):
+        fleet.remove_replica("r0")            # never below one replica
+
+
+def test_prebuilt_fleet_needs_replica_objects_to_grow():
+    reps = [GatewayReplica(f"n{i}", _abacus(), tracer=_counting_tracer([]))
+            for i in range(2)]
+    fleet = ClusterFrontend(replicas=reps)
+    with pytest.raises(ValueError):
+        fleet.add_replica("n2")               # no construction recipe
+    with fleet:
+        fleet.add_replica(GatewayReplica("n2", _abacus(),
+                                         tracer=_counting_tracer([])))
+        est = fleet.predict_one(_fake_cfg(), 2, 32)
+    assert est["replica"] in {"n0", "n1", "n2"}
+    assert len(fleet.replicas) == 3
+
+
+def test_reshard_aborts_cleanly_when_a_drain_times_out(tmp_path):
+    """A source replica stuck mid-tick (slow trace) past the reshard
+    timeout must ABORT the reshard — membership unchanged, no
+    migration under a live writer — and a retry succeeds once the
+    worker actually drained. The stuck replica's in-flight Future
+    still resolves (the drain serves it)."""
+    fleet = _fleet(2, tmp_path)
+    fleet.reshard_timeout = 0.3
+    gate, entered = threading.Event(), threading.Event()
+    base = _counting_tracer([])
+
+    def slow_tracer(cfg, batch, seq):
+        entered.set()
+        assert gate.wait(30)
+        return base(cfg, batch, seq)
+
+    with fleet:
+        i, cfg = 0, None
+        while cfg is None and i < 200:       # a config r1 owns
+            cand = _fake_cfg(f"g{i}")
+            if fleet.replica_for(config_fingerprint(cand)).name == "r1":
+                cfg = cand
+            i += 1
+        assert cfg is not None
+        stuck = fleet._by_name["r1"]
+        stuck.service._tracer = slow_tracer
+        fut = fleet.submit(cfg, 2, 32)
+        assert entered.wait(10)              # r1 is mid-tick, trace blocked
+        with pytest.raises(RuntimeError, match="did not drain"):
+            fleet.resize(3)
+        assert [r.name for r in fleet.replicas] == ["r0", "r1"]
+        assert fleet.stats()["reshard"]["reshards"] == 0
+        gate.set()
+        assert fut.result(30)["model"] == cfg.name   # drain served it
+        for _ in range(200):                 # worker exits after its tick
+            if not stuck.draining:
+                break
+            time.sleep(0.02)
+        assert not stuck.draining
+        fleet.resize(3)                      # retry now drains instantly
+        assert len(fleet.replicas) == 3
+        assert fleet.predict_one(cfg, 2, 32)["model"] == cfg.name
+    assert fleet.stats()["reshard"]["reshards"] == 1
+
+
+def test_migrate_failure_restores_service_on_the_old_ring(tmp_path,
+                                                          monkeypatch):
+    """A migration that fails mid-handoff (e.g. disk full) must restart
+    the drained replicas on the OLD ring — their shards keep serving —
+    and a retry completes the reshard."""
+    from repro.serve.kvstore import JsonFileStore
+    fleet = _fleet(3, tmp_path)
+    queries = _grid(names="abcdefghijkl", seqs=(32,))
+    with fleet:
+        pre = fleet.predict_many(queries)
+
+        def boom(self, keys, into):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(JsonFileStore, "split", boom)
+        with pytest.raises(OSError, match="disk full"):
+            fleet.remove_replica("r2")
+        assert [r.name for r in fleet.replicas] == ["r0", "r1", "r2"]
+        assert all(r.running for r in fleet.replicas)
+        mid = fleet.predict_many(queries)      # old ring still serves
+        monkeypatch.undo()
+        fleet.remove_replica("r2")             # retry completes
+        assert [r.name for r in fleet.replicas] == ["r0", "r1"]
+        post = fleet.predict_many(queries)
+    assert [_verdict(e) for e in pre] == [_verdict(e) for e in mid]
+    assert [_verdict(e) for e in pre] == [_verdict(e) for e in post]
+    _assert_slices_owned(fleet)
+
+
+# -- chaos: corrupt files inside a migrating slice ----------------------------
+
+
+def test_corrupt_files_in_slice_never_break_migration(tmp_path):
+    """Chaos satellite: a slice being handed off contains an
+    unparseable file and a foreign-schema file. Migration must
+    complete without an exception, every healthy key must arrive at
+    its new owner, and only the damaged keys re-trace on demand."""
+    calls = []
+    fleet = _fleet(3, tmp_path, calls=calls)
+    queries = _grid(names="abcdefghij", seqs=(32,))
+    with fleet:
+        pre = fleet.predict_many(queries)
+        victim = max(fleet.replicas,
+                     key=lambda r: len(list(r.service.store.keys())))
+        vkeys = sorted(victim.service.store.keys())
+        assert len(vkeys) >= 2, "grid too small to damage two keys"
+        with open(victim.service.store.path_for(vkeys[0]), "w") as f:
+            f.write("{torn mid-write")                  # unparseable
+        path = victim.service.store.path_for(vkeys[1])
+        with open(path) as f:
+            payload = json.load(f)
+        payload["version"] = 99                         # foreign schema
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        healthy = set(vkeys[2:])
+        fleet.remove_replica(victim.name)               # must not raise
+        assert victim.service.store.stats.corrupt >= 2  # damage was skipped
+        # every healthy key arrived at its new owner, loadable
+        for key in healthy:
+            owner = fleet.replica_for(key[0])
+            assert owner.service.store.get(key) is not None, key
+        _assert_slices_owned(fleet)
+        calls.clear()
+        post = fleet.predict_many(queries)
+        # only the damaged fingerprints re-trace; nothing healthy does
+        damaged_fps = {vkeys[0][0], vkeys[1][0]}
+        damaged_names = {q[0].name for q in queries
+                         if config_fingerprint(q[0]) in damaged_fps}
+        assert {name for name, _, _ in calls} <= damaged_names
+    assert [_verdict(e) for e in pre] == [_verdict(e) for e in post]
+
+
+# -- crash-restart durability -------------------------------------------------
+
+
+def test_crash_between_migrate_and_cutover_rebuilds_from_disk(tmp_path):
+    """Durability satellite: the process dies AFTER slices migrated but
+    BEFORE the ring swapped. A fresh frontend over the NEW membership
+    must serve identical estimates entirely from the migrated on-disk
+    slices — zero re-traces."""
+    queries = _grid()
+    fleet = _fleet(4, tmp_path)
+    with fleet:
+        pre = fleet.predict_many(queries)
+
+    def crash(*a, **kw):
+        raise RuntimeError("simulated crash before cutover")
+
+    fleet._cutover_swap = crash
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        fleet.remove_replica("r3")
+    del fleet                                  # the process is gone
+    calls = []
+    rebuilt = _fleet(3, tmp_path, calls=calls)
+    with rebuilt:
+        post = rebuilt.predict_many(queries)
+    assert [_verdict(e) for e in pre] == [_verdict(e) for e in post]
+    assert calls == [], "rebuild re-traced: migration was not durable"
+    _assert_slices_owned(rebuilt)
+
+
+# -- publisher / refitter membership ------------------------------------------
+
+
+def test_publisher_snapshots_membership_per_publish():
+    """Regression satellite: a replica added mid-``publish_generation``
+    neither corrupts the in-flight broadcast's accounting nor gets a
+    retroactive delivery — it catches the next generation."""
+    entered, gate = threading.Event(), threading.Event()
+
+    class _Gated:
+        def __init__(self):
+            self.got = []
+
+        def publish_generation(self, gen):
+            entered.set()
+            assert gate.wait(10)
+            self.got.append(gen.number)
+
+    gated = _Gated()
+    pub = GenerationPublisher([gated])
+    late = GatewayReplica("late", _abacus(), tracer=_counting_tracer([]))
+    result = {}
+
+    def broadcast():
+        result["ok"] = pub.publish_generation(
+            ModelGeneration(number=1, abacus=_abacus(seed=2)))
+
+    t = threading.Thread(target=broadcast)
+    t.start()
+    assert entered.wait(10)
+    pub.set_replicas([gated, late])            # membership change mid-flight
+    gate.set()
+    t.join(10)
+    assert result["ok"] is True                # complete over its snapshot
+    assert gated.got == [1]
+    assert late.service.generation == 0        # no retroactive delivery
+    info = pub.info()
+    assert info["published"] == 1 and info["deliveries"] == 1
+    assert info["failures"] == 0 and info["replicas"] == 2
+    assert pub.publish_generation(
+        ModelGeneration(number=2, abacus=_abacus(seed=3)))
+    assert gated.got == [1, 2] and late.service.generation == 2
+    assert pub.info()["deliveries"] == 3
+
+
+def test_reshard_rewires_publisher_refitter_and_seeds_generation(tmp_path):
+    """Joiners adopt the fleet's current generation BEFORE serving, and
+    the publisher/refitter membership follows the cutover."""
+    fleet = _fleet(2, tmp_path)
+    refitter = fleet.make_refitter(min_observations=10_000)
+    queries = _grid(names="ab", seqs=(32,))
+    with fleet:
+        fleet.predict_many(queries)
+        fleet.publish_generation(
+            ModelGeneration(number=3, abacus=_abacus(seed=7)))
+        for _ in range(100):                   # swaps land between ticks
+            if all(r.service.generation == 3 for r in fleet.replicas):
+                break
+            time.sleep(0.02)
+        assert all(r.service.generation == 3 for r in fleet.replicas)
+        fleet.resize(4)
+        joiners = [fleet._by_name["r2"], fleet._by_name["r3"]]
+        for rep in joiners:
+            assert rep.service.generation == 3  # seeded before serving
+        assert fleet.publisher.info()["replicas"] == 4
+        assert len(refitter.sources) == 4
+        ests = fleet.predict_many(queries)
+        assert all(e["generation"] == 3 for e in ests)
+        fleet.publish_generation(
+            ModelGeneration(number=4, abacus=_abacus(seed=8)))
+        for _ in range(100):
+            if all(r.service.generation == 4 for r in fleet.replicas):
+                break
+            time.sleep(0.02)
+        assert all(r.service.generation == 4 for r in fleet.replicas)
+    assert fleet.publisher.info()["deliveries"] >= 2 + 4
