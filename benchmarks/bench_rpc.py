@@ -1,0 +1,235 @@
+"""RPC fleet chaos: kill -9 one of 4 process-separated replicas under load.
+
+Spawns a 4-replica RPC fleet (``python -m repro.serve.rpc`` children
+over a shared-disk store layout), warms a working set, then SIGKILLs
+one replica while client threads keep submitting. The healing story
+under test, end to end:
+
+  * every in-flight Future resolves — hedged to the next ring owner,
+    retried after the death verdict, or replayed through the exclusion
+    cutover; zero client-visible errors.
+  * the dead member is auto-excluded (heartbeat/EOF verdict -> reshard)
+    and its on-disk slice migrates to the ring successors, so post-heal
+    queries for warm keys cost ZERO re-traces.
+  * estimates match an in-process fleet byte-for-byte at repo parity
+    precision (time @1e-12, mem @1e-6) before the kill, through the
+    chaos window, and after healing — the RandomForest-backed predictor
+    makes verdicts micro-batch-composition independent.
+
+    PYTHONPATH=src python benchmarks/bench_rpc.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+from concurrent.futures import Future
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.automl.models import RandomForestRegressor
+from repro.core.features import ProfileRecord
+from repro.core.predictor import DNNAbacus
+from repro.serve import ClusterFrontend
+from repro.serve.prediction_service import config_fingerprint
+from repro.serve.rpc import shutdown_fleet, spawn_fleet, synthetic_trace
+
+
+def _fit_records(n=80, seed=0):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for i in range(n):
+        batch = int(rng.choice([2, 4, 8, 16]))
+        seq = int(rng.choice([32, 64, 128]))
+        dots = float(rng.integers(4, 60))
+        flops = batch * seq * dots * 1e6
+        edges = {("dot", "add"): dots, ("add", "tanh"): dots,
+                 ("tanh", "dot"): dots - 1}
+        recs.append(ProfileRecord(
+            model_name=f"m{i}", family="dense", batch_size=batch,
+            input_size=seq, channels=64, learning_rate=1e-3, epoch=1,
+            optimizer="adamw", layers=int(rng.integers(2, 16)), flops=flops,
+            params=int(dots * 1e5), nsm_edges=edges,
+            time_s=flops / 5e10, mem_bytes=1e6 * dots + 4.0 * batch * seq))
+    return recs
+
+
+def _fit_abacus(seed=0):
+    # RandomForest: per-row exact predictions, so RPC micro-batch
+    # composition (frames split across ticks) cannot wobble the last ULP
+    fac = lambda s: [RandomForestRegressor(n_trees=10, seed=s)]
+    return DNNAbacus(seed=seed).fit(_fit_records(seed=seed),
+                                    candidate_factory=fac)
+
+
+class _Cfg:
+    """Duck-typed config: distinct fingerprints, cheap to hash."""
+
+    def __init__(self, i):
+        self.name = f"job{i:04d}"
+        self.family = "dense"
+        self.num_layers = 2 + i % 14
+        self.d_model = 64 + 16 * (i % 8)
+        self.widen = 1.0 + 0.125 * (i % 4)
+
+
+def _verdict(est):
+    """Parity tuple at repo precision (time @1e-12, mem @1e-6)."""
+    return (est["model"], round(est["time_s"], 12),
+            round(est["memory_bytes"], 6), est["admitted"],
+            est["generation"])
+
+
+def run(smoke: bool = True, out: str = "BENCH_rpc.json"):
+    n_keys = 24 if smoke else 96
+    n_replicas = 4
+    n_clients = 3 if smoke else 6
+    ab = _fit_abacus()
+    keyset = [(_Cfg(i), 2 + 2 * (i % 2), 32) for i in range(n_keys)]
+    root = tempfile.mkdtemp(prefix="abacus_rpc_")
+    fleet = []
+    try:
+        # the in-process fleet is the byte-for-byte oracle
+        with ClusterFrontend(ab, n_replicas=n_replicas,
+                             tracer=synthetic_trace) as local:
+            want = [_verdict(e) for e in local.predict_many(keyset, 120)]
+        want_by_model = {w[0]: w for w in want}
+
+        path = os.path.join(root, "predictor")
+        ab.save(path)
+        t0 = time.perf_counter()
+        fleet = spawn_fleet(n_replicas, path, root,
+                            tracer="repro.serve.rpc:synthetic_trace",
+                            heartbeat_interval=0.25, heartbeat_misses=2)
+        spawn_s = time.perf_counter() - t0
+        fe = ClusterFrontend(replicas=fleet, hedge_after_s=0.75,
+                             reshard_timeout=30)
+        fe.start()
+
+        t0 = time.perf_counter()
+        got = [_verdict(e) for e in fe.predict_many(keyset, 120)]
+        warm_s = time.perf_counter() - t0
+        parity_prekill = got == want
+
+        victim = fe.replica_for(config_fingerprint(keyset[0][0]))
+
+        futs, flock = [], threading.Lock()
+        stop_load = threading.Event()
+
+        def load():
+            while not stop_load.is_set():
+                for cfg, batch, seq in keyset:
+                    try:
+                        f = fe.submit(cfg, batch, seq)
+                    except Exception as e:
+                        f = Future()
+                        f.set_exception(e)
+                    with flock:
+                        futs.append(f)
+                time.sleep(0.01)
+
+        threads = [threading.Thread(target=load) for _ in range(n_clients)]
+        for t in threads:
+            t.start()
+        time.sleep(0.3)
+        t_kill = time.perf_counter()
+        victim.kill()  # SIGKILL: no drain, no goodbye
+        deadline = time.monotonic() + 30
+        while victim.name in fe._by_name and time.monotonic() < deadline:
+            time.sleep(0.02)
+        excl_s = time.perf_counter() - t_kill
+        excluded = victim.name not in fe._by_name
+        time.sleep(0.5)  # keep loading through the healed ring
+        stop_load.set()
+        for t in threads:
+            t.join(60)
+
+        resolve_errors = chaos_mismatches = 0
+        for f in futs:
+            try:
+                est = f.result(120)
+            except Exception:
+                resolve_errors += 1
+                continue
+            if _verdict(est) != want_by_model[est["model"]]:
+                chaos_mismatches += 1
+
+        # post-heal: warm keys come off the MIGRATED slices, no tracing
+        cold_before = fe.stats()["fleet"]["cold_traces"]
+        healed = [_verdict(e) for e in fe.predict_many(keyset, 120)]
+        retraces = fe.stats()["fleet"]["cold_traces"] - cold_before
+        parity_postheal = healed == want
+        st = fe.stats()["reshard"]
+
+        rows = [
+            ("replicas", float(n_replicas)),
+            ("working_set", float(n_keys)),
+            ("clients", float(n_clients)),
+            ("spawn_s", spawn_s),
+            ("warm_pass_s", warm_s),
+            ("futures_submitted", float(len(futs))),
+            ("resolve_errors", float(resolve_errors)),
+            ("chaos_verdict_mismatches", float(chaos_mismatches)),
+            ("excluded", float(excluded)),
+            ("exclusion_latency_s", excl_s),
+            ("exclusions", float(st["exclusions"])),
+            ("hedges", float(st["hedges"])),
+            ("retries", float(st["retries"])),
+            ("post_heal_retraces", float(retraces)),
+            ("parity_prekill", float(parity_prekill)),
+            ("parity_postheal", float(parity_postheal)),
+        ]
+        if out:
+            payload = {name: val for name, val in rows}
+            payload["smoke"] = smoke
+            with open(out, "w") as f:
+                json.dump(payload, f, indent=2)
+        return rows
+    finally:
+        shutdown_fleet(fleet)
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small working set (seconds; CI tier-1)")
+    ap.add_argument("--out", default="BENCH_rpc.json")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out=args.out)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    d = dict(rows)
+    rc = 0
+    if d["resolve_errors"] or d["chaos_verdict_mismatches"]:
+        print(f"# FAIL: {d['resolve_errors']:.0f} futures errored, "
+              f"{d['chaos_verdict_mismatches']:.0f} chaos verdicts diverged "
+              "(every in-flight future must resolve byte-for-byte)",
+              file=sys.stderr)
+        rc = 1
+    if not d["excluded"] or d["exclusions"] != 1:
+        print("# FAIL: dead replica was not reshard-excluded",
+              file=sys.stderr)
+        rc = 1
+    if d["post_heal_retraces"]:
+        print(f"# FAIL: {d['post_heal_retraces']:.0f} re-traces after "
+              "healing (warm keys must rebuild from the migrated slice)",
+              file=sys.stderr)
+        rc = 1
+    if not (d["parity_prekill"] and d["parity_postheal"]):
+        print("# FAIL: RPC fleet diverged from the in-process fleet",
+              file=sys.stderr)
+        rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,7 @@ BENCHES = [
     ("refit", "benchmarks.bench_refit"),                # online refit loop
     ("cluster", "benchmarks.bench_cluster"),            # sharded replica fleet
     ("reshard", "benchmarks.bench_reshard"),            # elastic resharding
+    ("rpc", "benchmarks.bench_rpc"),                    # RPC fleet chaos
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
 

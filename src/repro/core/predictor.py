@@ -130,25 +130,36 @@ class DNNAbacus:
         return self.service().predict_one(cfg, batch, seq)
 
     # -- persistence ----------------------------------------------------------
-    def save(self, path: str) -> None:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        d = {
+    def to_dict(self) -> Dict:
+        """JSON-safe snapshot of the fitted predictor.
+
+        The single serialization seam: ``save``/``load`` persist it to
+        disk, and the RPC fleet (``repro.serve.rpc``) ships it over the
+        wire to adopt model generations in remote replica processes.
+        """
+        return {
             "representation": self.representation,
             "seed": self.seed,
             "vocab": self.nsm_feat.vocab if self.nsm_feat else None,
             "time_model": self.time_model.to_dict(),
             "mem_model": self.mem_model.to_dict(),
         }
-        with open(path + ".json", "w") as f:
-            json.dump(d, f)
 
     @classmethod
-    def load(cls, path: str) -> "DNNAbacus":
-        with open(path + ".json") as f:
-            d = json.load(f)
+    def from_dict(cls, d: Dict) -> "DNNAbacus":
         ab = cls(representation=d["representation"], seed=d["seed"])
         if ab.nsm_feat is not None:
             ab.nsm_feat.vocab = d["vocab"]
         ab.time_model = FittedEnsemble.from_dict(d["time_model"])
         ab.mem_model = FittedEnsemble.from_dict(d["mem_model"])
         return ab
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path + ".json", "w") as f:
+            json.dump(self.to_dict(), f)
+
+    @classmethod
+    def load(cls, path: str) -> "DNNAbacus":
+        with open(path + ".json") as f:
+            return cls.from_dict(json.load(f))

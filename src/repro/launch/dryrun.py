@@ -227,16 +227,50 @@ def main(argv=None) -> int:
                          "after the first arch (drain -> migrate -> "
                          "cutover under the sweep's own load; requires "
                          "--replicas > 1)")
+    ap.add_argument("--rpc", action="store_true",
+                    help="with --replicas > 1: spawn each gateway as its "
+                         "own process (python -m repro.serve.rpc) behind "
+                         "the TCP frame transport; a crashed replica is "
+                         "auto-excluded and its warm slice rebuilt from "
+                         "disk by the surviving owners")
     args = ap.parse_args(argv)
 
     service = server = None
+    rpc_fleet = []
+    if args.rpc and args.replicas < 2:
+        print("[dryrun] --rpc needs a fleet (--replicas > 1); serving "
+              "in-process", file=sys.stderr)
+        args.rpc = False
     if args.predict:
         from repro.core.predictor import DNNAbacus
         from repro.serve.feedback_store import FeedbackStore
         from repro.serve.server import AbacusServer
         from repro.serve.trace_store import TraceStore
         if os.path.exists(args.predictor_path + ".json"):
-            if args.replicas > 1:
+            if args.rpc:
+                # process-separated fleet: each gateway is its own
+                # ``python -m repro.serve.rpc`` child; the frontend
+                # routes over TCP and keeps LOCAL store handles on the
+                # same slice directories (shared disk), so exclusion
+                # and migration work exactly as in-process.
+                from repro.serve.cluster import ClusterFrontend
+                from repro.serve.rpc import spawn_replica, shutdown_fleet
+                try:
+                    for i in range(args.replicas):
+                        name = f"r{i}"
+                        rpc_fleet.append(spawn_replica(
+                            name, args.predictor_path,
+                            trace_root=(os.path.join(args.trace_store, name)
+                                        if args.trace_store else None),
+                            feedback_root=(
+                                os.path.join(args.feedback_store, name)
+                                if args.feedback_store else None)))
+                except BaseException:
+                    shutdown_fleet(rpc_fleet)
+                    raise
+                server = ClusterFrontend(replicas=rpc_fleet,
+                                         hedge_after_s=5.0).start()
+            elif args.replicas > 1:
                 # the fleet path: estimates route by config fingerprint
                 # to N sharded gateways; each cell's observation lands
                 # in the owning replica's feedback slice, ready for a
@@ -269,6 +303,12 @@ def main(argv=None) -> int:
     resize_to = int(args.resize_to or 0)
     if resize_to and not hasattr(server, "resize"):
         print("[dryrun] --resize-to needs a fleet (--replicas > 1); "
+              "ignoring", file=sys.stderr)
+        resize_to = 0
+    if resize_to and rpc_fleet and resize_to > len(rpc_fleet):
+        # growing an RPC fleet means spawning processes, which the
+        # reshard recipe (it mints in-process gateways) cannot do
+        print("[dryrun] --resize-to growth is not supported with --rpc; "
               "ignoring", file=sys.stderr)
         resize_to = 0
     failures = 0
@@ -316,6 +356,9 @@ def main(argv=None) -> int:
                       f"keys_moved={reshard['keys_moved']} "
                       f"replayed={reshard['keys_replayed']}", file=sys.stderr)
             server.stop()
+        if rpc_fleet:
+            from repro.serve.rpc import shutdown_fleet
+            shutdown_fleet(rpc_fleet)
     return 1 if failures else 0
 
 

@@ -2,17 +2,20 @@
 
 Import-light by design: the admission-gateway stack (``TraceStore``,
 ``PredictionService``, ``AbacusServer``, ``AdmissionController``), the
-online-refit loop (``FeedbackStore``, ``OnlineRefitter``), and the
+online-refit loop (``FeedbackStore``, ``OnlineRefitter``), the
 multi-host fabric (``ClusterFrontend``, ``GatewayReplica``,
-``GenerationPublisher``) are pure numpy/stdlib and re-exported here;
-``repro.serve.engine`` (the jax decode engine) is imported lazily by
-consumers that need it. All durable maps share one persistence base,
-``repro.serve.kvstore.JsonFileStore``.
+``GenerationPublisher``), and the RPC transport (``RemoteReplica``,
+``ReplicaServer``, ``spawn_fleet``) are pure numpy/stdlib and
+re-exported here; ``repro.serve.engine`` (the jax decode engine) is
+imported lazily by consumers that need it. All durable maps share one
+persistence base, ``repro.serve.kvstore.JsonFileStore``.
 """
 
 from repro.serve.admission import AdmissionController, Verdict
 from repro.serve.cluster import (ClusterFrontend, GatewayReplica,
-                                 GenerationPublisher, HashRing, RingDiff)
+                                 GenerationPublisher, HashRing,
+                                 ReplicaNotRunning, ReplicaUnavailable,
+                                 RingDiff)
 from repro.serve.feedback_store import (CalibrationWindow, FeedbackStore,
                                         Observation)
 from repro.serve.kvstore import JsonFileStore, atomic_write_json
@@ -22,9 +25,26 @@ from repro.serve.refit import ModelGeneration, OnlineRefitter
 from repro.serve.server import AbacusServer
 from repro.serve.trace_store import TraceStore
 
+# Lazy (PEP 562) so `python -m repro.serve.rpc` does not import the rpc
+# module twice (once via this package, once as __main__ — runpy warns).
+_RPC_EXPORTS = ("RemoteReplica", "ReplicaServer", "spawn_replica",
+                "spawn_fleet", "shutdown_fleet")
+
+
+def __getattr__(name):
+    if name in _RPC_EXPORTS:
+        from repro.serve import rpc
+
+        return getattr(rpc, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = ["AdmissionController", "Verdict", "PredictionService", "Query",
            "config_fingerprint", "AbacusServer", "TraceStore",
            "FeedbackStore", "Observation", "CalibrationWindow",
            "OnlineRefitter", "ModelGeneration", "JsonFileStore",
            "atomic_write_json", "ClusterFrontend", "GatewayReplica",
-           "GenerationPublisher", "HashRing", "RingDiff"]
+           "GenerationPublisher", "HashRing", "RingDiff",
+           "ReplicaUnavailable", "ReplicaNotRunning", "RemoteReplica",
+           "ReplicaServer", "spawn_replica", "spawn_fleet",
+           "shutdown_fleet"]

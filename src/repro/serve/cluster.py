@@ -65,6 +65,40 @@ from repro.serve.server import AbacusServer, ServerStats
 from repro.serve.trace_store import TraceStore
 
 
+class ReplicaUnavailable(RuntimeError):
+    """A replica cannot be reached: dead connection, timed-out call, or
+    a send that failed mid-flight. Retryable — the frontend re-routes
+    the query to the next ring owner (the query is idempotent)."""
+
+
+class ReplicaNotRunning(RuntimeError):
+    """The remote gateway rejected the call because its worker is not
+    running (drain window of a reshard, or stopped). Retryable through
+    the post-cutover ring."""
+
+
+def _first_wins(fut: Future, result=None, error=None) -> None:
+    """Resolve ``fut`` if nobody beat us to it (hedged duplicates race)."""
+    try:
+        if error is not None:
+            fut.set_exception(error)
+        else:
+            fut.set_result(result)
+    except Exception:
+        pass  # already resolved (or cancelled) by the other attempt
+
+
+def _relay(src: Future, out: Future) -> None:
+    """Propagate one attempt's outcome into the caller's Future."""
+    if src.cancelled() or out.done():
+        return
+    err = src.exception()
+    if err is None:
+        _first_wins(out, result=src.result())
+    else:
+        _first_wins(out, error=err)
+
+
 class HashRing:
     """Consistent-hash ring over replica names.
 
@@ -103,6 +137,28 @@ class HashRing:
         """Owning replica name for ``key`` (clockwise successor)."""
         idx = bisect.bisect_right(self._hashes, self._point(str(key)))
         return self._names[idx % len(self._names)]
+
+    def successors(self, key: str) -> List[str]:
+        """EVERY replica name in clockwise order from ``key``'s point.
+
+        ``successors(k)[0] == route(k)``; the rest are the fallback
+        order the frontend hedges/retries through when an owner is slow
+        or dead — the same order a ring *without* the owner would route
+        to, so a hedge lands exactly where an exclusion reshard will put
+        the key's slice.
+        """
+        idx = bisect.bisect_right(self._hashes, self._point(str(key)))
+        out: List[str] = []
+        seen: set = set()
+        total = len(self.names)
+        for i in range(len(self._names)):
+            name = self._names[(idx + i) % len(self._names)]
+            if name not in seen:
+                seen.add(name)
+                out.append(name)
+                if len(out) == total:
+                    break
+        return out
 
     def _owner_after(self, point: int) -> str:
         """Owner of the arc just clockwise of ``point``."""
@@ -316,6 +372,9 @@ class ClusterFrontend:
                  service_kw: Optional[Dict] = None,
                  replicas: Optional[Sequence[GatewayReplica]] = None,
                  reshard_timeout: float = 30.0,
+                 hedge_after_s: Optional[float] = None,
+                 auto_exclude: bool = True,
+                 max_retries: int = 3,
                  **server_kw):
         # construction recipe, kept so live resharding can mint replicas
         self._abacus = abacus
@@ -348,7 +407,18 @@ class ClusterFrontend:
         self.reshard_timeout = float(reshard_timeout)
         self.reshard_stats = {"reshards": 0, "keys_moved": 0,
                               "units_moved": 0, "keys_skipped": 0,
-                              "keys_replayed": 0, "cutover_ticks": 0}
+                              "keys_replayed": 0, "cutover_ticks": 0,
+                              "hedges": 0, "retries": 0, "exclusions": 0}
+        # failure handling for transport-backed replicas (repro.serve.rpc):
+        # hedge_after_s duplicates a slow query to the next ring owner,
+        # max_retries bounds re-routes of failed submits, auto_exclude
+        # reshards a heartbeat-dead replica out of the fleet. In-process
+        # replicas don't advertise ``supports_hedge`` and are untouched.
+        self.hedge_after_s = hedge_after_s
+        self.auto_exclude = bool(auto_exclude)
+        self.max_retries = int(max_retries)
+        for r in self.replicas:
+            self._wire_failure_handling(r)
         # central (federated) feedback store: the refitter's input
         self.feedback = (FeedbackStore(os.path.join(feedback_root, "central"))
                          if feedback_root else None)
@@ -428,22 +498,142 @@ class ClusterFrontend:
     def submit(self, cfg, batch: int, seq: int) -> Future:
         """Route one query to its shard; fingerprint computed ONCE here."""
         fp = config_fingerprint(cfg)
+        return self._submit_query(Query(cfg, int(batch), int(seq), fp=fp))
+
+    def _pick_owner(self, fp: str, avoid: frozenset):
+        """Owning replica for ``fp``, skipping avoided and dead members.
+
+        With nothing to avoid and no dead replicas this IS ``route``
+        (``successors[0]`` is the primary owner); the fallback order is
+        the hedge/retry order."""
+        for name in self.ring.successors(fp):
+            replica = self._by_name.get(name)
+            if replica is None or name in avoid:
+                continue
+            if getattr(replica, "dead", False):
+                continue
+            return replica
+        return None
+
+    def _submit_query(self, q: Query, avoid: frozenset = frozenset(),
+                      attempts: Optional[int] = None) -> Future:
+        """Submit one routed query; transport-backed owners get a
+        guarded Future (retry on replica death, optional hedging)."""
+        attempts = self.max_retries if attempts is None else attempts
         deadline = time.monotonic() + self.reshard_timeout
         parked = False
         while True:
             with self._route_lock:
                 epoch = self._epoch
-                replica = self._by_name[self.ring.route(fp)]
+                replica = self._pick_owner(q.fp, avoid)
+                if replica is None:
+                    raise ReplicaUnavailable(
+                        f"no live replica owns {q.fp!r} "
+                        f"(avoided={sorted(avoid)})")
                 try:
-                    fut = replica.submit(cfg, batch, seq, fp=fp)
-                    if parked:  # counted once per query, not per wakeup
-                        self.reshard_stats["keys_replayed"] += 1
-                    return fut
+                    fut = replica.submit(q.cfg, q.batch, q.seq, fp=q.fp)
+                except ReplicaUnavailable:
+                    # owner died between the dead-check and the send:
+                    # fall through to its ring successor immediately
+                    avoid = avoid | {replica.name}
+                    continue
                 except RuntimeError:
                     if not self._resharding:
                         raise  # genuinely stopped, not a racing cutover
                     self._await_cutover(epoch, deadline)
                     parked = True
+                    continue
+                if parked:  # counted once per query, not per wakeup
+                    self.reshard_stats["keys_replayed"] += 1
+                if getattr(replica, "supports_hedge", False):
+                    return self._guard(q, fut, replica.name, attempts)
+                return fut
+
+    def _guard(self, q: Query, fut: Future, owner: str,
+               attempts: int) -> Future:
+        """Wrap a transport-backed Future with failure handling.
+
+        The caller's Future resolves from whichever attempt finishes
+        first (duplicate results are dropped — queries are idempotent
+        and replicas agree byte-for-byte). A retryable failure
+        (connection death, timeout, a drain-window rejection) re-routes
+        the query; ``hedge_after_s`` additionally duplicates a *slow*
+        query to the next ring owner without waiting for a failure.
+        """
+        out: Future = Future()
+        out.set_running_or_notify_cancel()
+        timer: List = [None]
+
+        def settle(src: Future) -> None:
+            if timer[0] is not None:
+                timer[0].cancel()
+            if out.done():
+                return
+            if src.cancelled():
+                return
+            err = src.exception()
+            if err is None:
+                _first_wins(out, result=src.result())
+            elif isinstance(err, (ReplicaUnavailable, ReplicaNotRunning)) \
+                    and attempts > 0:
+                # re-route on a fresh thread: this callback may run on
+                # the dying replica's reader thread, and the retry can
+                # need to park for an exclusion cutover.
+                threading.Thread(
+                    target=self._retry, args=(q, out, {owner}, attempts - 1),
+                    name="cluster-retry", daemon=True).start()
+            else:
+                _first_wins(out, error=err)
+
+        if self.hedge_after_s is not None:
+            t = threading.Timer(self.hedge_after_s, self._hedge,
+                                args=(q, out, owner))
+            t.daemon = True
+            timer[0] = t
+            t.start()
+        fut.add_done_callback(settle)
+        return out
+
+    def _retry(self, q: Query, out: Future, avoid: set,
+               attempts: int) -> None:
+        """Re-route a failed query; parks for a cutover mid-reshard.
+
+        If a reshard (often the exclusion of the replica that just
+        failed) is in flight, wait for its cutover and trust the NEW
+        ring — the post-cutover owner holds the migrated slice, so the
+        replay costs zero re-traces. Otherwise route around the failure
+        via the ring's successor order right away.
+        """
+        try:
+            with self._route_lock:
+                if self._resharding:
+                    try:
+                        self._await_cutover(
+                            self._epoch,
+                            time.monotonic() + self.reshard_timeout)
+                        avoid = set()  # the new ring is authoritative
+                    except RuntimeError:
+                        pass  # cutover never came: fall back to avoidance
+                self.reshard_stats["retries"] += 1
+            inner = self._submit_query(q, avoid=frozenset(avoid),
+                                       attempts=attempts)
+        except Exception as e:
+            _first_wins(out, error=e)
+            return
+        inner.add_done_callback(lambda f: _relay(f, out))
+
+    def _hedge(self, q: Query, out: Future, primary: str) -> None:
+        """Duplicate a slow query to the next ring owner (first wins)."""
+        if out.done():
+            return
+        with self._route_lock:
+            self.reshard_stats["hedges"] += 1
+        try:
+            inner = self._submit_query(q, avoid=frozenset({primary}),
+                                       attempts=0)
+        except Exception:
+            return  # the primary may still answer; never fail out here
+        inner.add_done_callback(lambda f: _relay(f, out))
 
     def submit_many(self, queries: Sequence) -> List[Future]:
         """Fan a wave out: one enqueue (-> one tick wake) per replica.
@@ -461,6 +651,7 @@ class ClusterFrontend:
         futs: List[Optional[Future]] = [None] * len(qs)
         pending = list(range(len(qs)))
         parked: set = set()        # queries that raced a cutover, deduped
+        singles: List[int] = []    # rerouted one-by-one around a dead owner
         deadline = time.monotonic() + self.reshard_timeout
         while pending:
             with self._route_lock:
@@ -470,10 +661,18 @@ class ClusterFrontend:
                     parts.setdefault(self.ring.route(qs[i].fp), []).append(i)
                 raced: List[int] = []
                 for name, idxs in parts.items():
+                    replica = self._by_name[name]
                     try:
-                        for i, fut in zip(idxs, self._by_name[name]
+                        for i, fut in zip(idxs, replica
                                           .submit_many([qs[i] for i in idxs])):
-                            futs[i] = fut
+                            futs[i] = (self._guard(qs[i], fut, name,
+                                                   self.max_retries)
+                                       if getattr(replica, "supports_hedge",
+                                                  False) else fut)
+                    except ReplicaUnavailable:
+                        # dead owner: re-route those queries individually
+                        # (outside this lock) through the successor order
+                        singles.extend(idxs)
                     except RuntimeError:
                         if not self._resharding:
                             raise
@@ -484,6 +683,8 @@ class ClusterFrontend:
                     self._await_cutover(epoch, deadline)
                 elif parked:  # counted once per query, not per wakeup
                     self.reshard_stats["keys_replayed"] += len(parked)
+        for i in singles:
+            futs[i] = self._submit_query(qs[i])
         return futs  # type: ignore[return-value]
 
     def predict_one(self, cfg, batch: int, seq: int,
@@ -534,6 +735,67 @@ class ClusterFrontend:
 
         return self._reshard(plan)
 
+    # -- failure handling (transport-backed replicas) ------------------------
+    def _wire_failure_handling(self, replica) -> None:
+        """Attach the dead-replica callback to a transport-backed member."""
+        if getattr(replica, "supports_hedge", False) \
+                and hasattr(replica, "on_dead"):
+            replica.on_dead = self._on_replica_dead
+
+    def _on_replica_dead(self, replica) -> None:
+        """Heartbeat verdict: a member stopped answering.
+
+        Runs on the dead replica's heartbeat (or reader) thread, so the
+        exclusion reshard is handed to its own thread — the protocol
+        drains, migrates, and must never run on a transport thread.
+        """
+        if not self.auto_exclude:
+            return
+        threading.Thread(target=self._exclude_dead, args=(replica.name,),
+                         name=f"exclude-{replica.name}", daemon=True).start()
+
+    def _exclude_dead(self, name: str, retries: int = 50) -> None:
+        for _ in range(retries):
+            try:
+                self.exclude_replica(name)
+                return
+            except ValueError:
+                return  # already excluded (or fleet-of-one: nothing to do)
+            except RuntimeError:
+                time.sleep(0.2)  # another reshard holds the guard: retry
+
+    def exclude_replica(self, name: str) -> Dict:
+        """Reshard a DEAD replica out of the fleet (the crash path).
+
+        Unlike ``remove_replica`` there is nothing to drain — the
+        process is gone and its worker with it. Its authoritative state
+        is its on-disk ``TraceStore``/``FeedbackStore`` slice (the
+        gateway writes through at trace time), which the ordinary
+        migrate step hands to the ring successors exactly as the PR 5
+        crash-restart path does: warm keys are rebuilt from disk, zero
+        re-traces. In-flight queries against the dead member fail fast
+        (``ReplicaUnavailable``) and re-route via hedge/retry.
+        """
+        name = str(name)
+
+        def plan(old_names):
+            if name not in old_names:
+                raise ValueError(f"no replica named {name!r}")
+            if len(old_names) == 1:
+                raise ValueError("cannot exclude the last replica")
+            return [n for n in old_names if n != name]
+
+        doomed = self._by_name.get(name)
+        summary = self._reshard(plan)
+        with self._route_lock:
+            self.reshard_stats["exclusions"] += 1
+        if doomed is not None and hasattr(doomed, "close"):
+            try:
+                doomed.close()
+            except Exception:
+                pass
+        return summary
+
     def resize(self, n_replicas: int) -> Dict:
         """Reshard the fleet to ``n_replicas`` gateways in ONE protocol
         pass (one drain, one migration, one cutover — not N single-step
@@ -557,8 +819,14 @@ class ClusterFrontend:
         return self._reshard(plan)
 
     def _current_generation(self):
-        """(abacus, generation) snapshot of the newest replica."""
-        newest = max(self.replicas, key=lambda r: r.service.generation)
+        """(abacus, generation) snapshot of the newest LIVE replica.
+
+        Dead members still report a (cached) generation but can no
+        longer serve a snapshot — never pick one while a survivor
+        exists."""
+        live = [r for r in self.replicas if not getattr(r, "dead", False)]
+        newest = max(live or self.replicas,
+                     key=lambda r: r.service.generation)
         return newest.service.snapshot()
 
     @staticmethod
@@ -620,10 +888,13 @@ class ClusterFrontend:
             joiners = {n: (prebuilt or {}).get(n) or self._build_replica(n)
                        for n in names if n not in self._by_name}
             # joiners adopt the fleet's CURRENT generation before serving
-            abacus, generation = self._current_generation()
-            for rep in joiners.values():
-                if generation > rep.service.generation:
-                    rep.service.adopt(abacus, generation)
+            # (lazily: an exclusion has no joiners and possibly no live
+            # replica to snapshot from until the cutover)
+            if joiners:
+                abacus, generation = self._current_generation()
+                for rep in joiners.values():
+                    if generation > rep.service.generation:
+                        rep.service.adopt(abacus, generation)
             # 1) drain the affected replicas (keyspace losers + leavers)
             affected = [self._by_name[n] for n in old_names
                         if n in diff.sources or n not in names]
@@ -701,6 +972,8 @@ class ClusterFrontend:
         ring. (Separated from ``_reshard`` so crash tests can fail the
         protocol precisely between migrate and cutover.)
         """
+        for rep in joiners.values():
+            self._wire_failure_handling(rep)
         with self._route_lock:
             self.replicas = [joiners.get(n) or self._by_name[n]
                              for n in names]
@@ -742,6 +1015,7 @@ class ClusterFrontend:
         fp = kw.pop("fp", None) or config_fingerprint(cfg)
         deadline = time.monotonic() + self.reshard_timeout
         redeliveries = 0
+        avoid: set = set()
         while True:
             with self._route_lock:
                 name = self.ring.route(fp)
@@ -749,7 +1023,23 @@ class ClusterFrontend:
                     self._await_cutover(self._epoch, deadline)
                     continue                  # parked; re-route fresh
                 replica = self._by_name[name]
-            replica.observe(cfg, batch, seq, time_s, mem_bytes, fp=fp, **kw)
+                if name in avoid or getattr(replica, "dead", False):
+                    picked = self._pick_owner(fp, frozenset(avoid))
+                    if picked is None:
+                        raise ReplicaUnavailable(
+                            f"no live replica to observe {fp!r}")
+                    replica = picked
+            try:
+                replica.observe(cfg, batch, seq, time_s, mem_bytes,
+                                fp=fp, **kw)
+            except ReplicaUnavailable:
+                # owner died mid-call: its slice survives on disk and the
+                # exclusion reshard will hand it over — deliver to the
+                # ring successor now (feedback merges are idempotent).
+                avoid.add(replica.name)
+                if len(avoid) >= len(self.replicas):
+                    raise
+                continue
             with self._route_lock:
                 if (self._by_name.get(replica.name) is replica
                         or redeliveries >= 3):

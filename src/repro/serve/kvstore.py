@@ -171,12 +171,19 @@ class JsonFileStore:
         return None if payload is None else payload[self.VALUE_FIELD]
 
     def put_raw(self, key: StoreKey, raw) -> str:
-        """Atomically persist ``raw`` under ``key``; returns the path."""
+        """Atomically persist ``raw`` under ``key``; returns the path.
+
+        Serialized under ``_lock`` so a write can never land inside
+        another thread's read→merge→delete window (``split`` holds the
+        lock across that whole sequence; an unserialized writer there
+        would have its value silently unlinked during migration).
+        """
         path = self.path_for(key)
         payload = {"version": self.schema_version,
                    "key": [key[0], int(key[1]), int(key[2])],
                    self.VALUE_FIELD: raw}
-        atomic_write_json(self.root, path, payload)
+        with self._lock:
+            atomic_write_json(self.root, path, payload)
         return path
 
     # -- inventory ----------------------------------------------------------
@@ -268,20 +275,28 @@ class JsonFileStore:
 
         Returns ``{"moved": files removed here, "units": units new to
         the destination, "skipped": keys with no loadable file}``.
+
+        The read→merge→unlink sequence for each key holds ``_lock``: a
+        concurrent ``put_raw``/``_merge_one`` landing a *newer* value in
+        that window would otherwise be deleted unseen. Holding our lock
+        while taking ``into``'s (inside ``_merge_one``) nests two store
+        locks src→dest; that nesting is deadlock-free because resharding
+        runs splits from a single thread (the one-reshard-at-a-time
+        guard) and nothing splits in the opposite direction concurrently.
         """
         moved = units = skipped = 0
         for key in keys:
             with self._lock:
                 raw = self.get_raw(key)
-            if raw is None:
-                skipped += 1
-                continue
-            units += into._merge_one(key, raw)
-            try:
-                os.unlink(self.path_for(key))
-                moved += 1
-            except OSError:
-                pass  # a concurrent compact/clear got there first
+                if raw is None:
+                    skipped += 1
+                    continue
+                units += into._merge_one(key, raw)
+                try:
+                    os.unlink(self.path_for(key))
+                    moved += 1
+                except OSError:
+                    pass  # a concurrent compact/clear got there first
         if moved:
             self._on_split(moved)
         return {"moved": moved, "units": units, "skipped": skipped}

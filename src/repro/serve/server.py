@@ -51,7 +51,14 @@ class ServerStats:
 
     @property
     def mean_batch(self) -> float:
-        return self.completed / self.ticks if self.ticks else 0.0
+        """Mean micro-batch size actually coalesced per tick.
+
+        Failed queries still occupied a batch slot — dividing only
+        ``completed`` by ``ticks`` would drag the reported coalescing
+        size toward zero on failure-heavy workloads.
+        """
+        return (self.completed + self.failed) / self.ticks \
+            if self.ticks else 0.0
 
     def __call__(self) -> Dict:
         """``server.stats()``: the full stats dict, counters included.
@@ -239,7 +246,14 @@ class AbacusServer:
                     self._pending_gen = gen
                 self._cond.notify_all()
                 return True
-        return self.service.adopt(gen.abacus, gen.number)
+        adopted = self.service.adopt(gen.abacus, gen.number)
+        if adopted:
+            # the direct-adopt path bypasses _apply_pending_locked, but a
+            # successful swap is a swap — count it, or fleet-level swap
+            # accounting disagrees with the generations actually serving.
+            with self._cond:
+                self.stats.gen_swaps += 1
+        return adopted
 
     def _apply_pending_locked(self) -> None:
         """Adopt a queued generation; callers hold ``self._cond``."""
@@ -264,7 +278,8 @@ class AbacusServer:
         """
         if float(time_s) <= 0.0 or float(mem_bytes) <= 0.0:
             return
-        self.stats.observations += 1
+        with self._cond:  # concurrent observers race the unlocked += 1
+            self.stats.observations += 1
         if predicted_time_s is not None and predicted_mem_bytes is not None:
             self.calibration.observe(predicted_time_s, time_s,
                                      predicted_mem_bytes, mem_bytes,
@@ -303,7 +318,8 @@ class AbacusServer:
                 # would hang every pending and future query silently.
                 for _, fut in live:
                     if not fut.done():
-                        self.stats.failed += 1
+                        with self._cond:
+                            self.stats.failed += 1
                         try:
                             fut.set_exception(e)
                         except Exception:
@@ -314,10 +330,14 @@ class AbacusServer:
                     return
 
     def _serve_batch(self, batch: List[Tuple[Query, Future]]) -> None:
+        # counter mutations here happen under self._cond: the worker is
+        # not the only writer (observe() and remote stats readers run on
+        # client threads), and unlocked read-modify-writes drop counts.
         svc = self.service
-        self.stats.ticks += 1
-        tick = self.stats.ticks
-        self.stats.max_batch = max(self.stats.max_batch, len(batch))
+        with self._cond:
+            self.stats.ticks += 1
+            tick = self.stats.ticks
+            self.stats.max_batch = max(self.stats.max_batch, len(batch))
         # one (abacus, generation) snapshot covers the whole tick: even a
         # direct service.adopt racing this batch cannot mix generations
         # within it (verdicts are tagged with the snapshot generation).
@@ -346,7 +366,8 @@ class AbacusServer:
                 rec_of[key] = f.result()
             except Exception as e:  # bad config: fail that query, not the tick
                 err_of[key] = e
-        self.stats.cold_traces += svc.stats.traces - traces_before
+        with self._cond:
+            self.stats.cold_traces += svc.stats.traces - traces_before
         # 2) ONE ensemble pass over the unique resolvable records.
         uniq = [k for k in by_key if k in rec_of]
         preds = {}
@@ -358,20 +379,23 @@ class AbacusServer:
                 preds, ran_ensemble = svc.predict_keys(
                     uniq, [rec_of[k] for k in uniq],
                     abacus=abacus, generation=generation)
-                self.stats.ensemble_passes += int(ran_ensemble)
+                with self._cond:
+                    self.stats.ensemble_passes += int(ran_ensemble)
             except Exception as e:
                 err_of.update({k: e for k in uniq})
         # 3) resolve futures with per-query admission verdicts.
         for (q, fut), key in zip(batch, key_of):
             if key in preds:
                 t, m = preds[key]
-                self.stats.completed += 1
+                with self._cond:
+                    self.stats.completed += 1
                 est = svc._estimate(rec_of[key], t, m, generation=generation)
                 est["tick"] = tick
                 est.update(self.est_tags)
                 fut.set_result(est)
             else:
-                self.stats.failed += 1
+                with self._cond:
+                    self.stats.failed += 1
                 fut.set_exception(err_of.get(
                     key, RuntimeError("prediction failed")))
 

@@ -10,6 +10,7 @@ both). Properties run with or without hypothesis via ``tests/_hypo``.
 
 import json
 import os
+import threading
 import time
 
 import numpy as np
@@ -358,3 +359,39 @@ def test_clear_removes_only_own_prefix(tmp_path):
 def test_merge_raw_contract_is_enforced():
     with pytest.raises(NotImplementedError):
         JsonFileStore.__new__(JsonFileStore)._merge_raw(None, {})
+
+
+def test_split_serializes_concurrent_writer(tmp_path):
+    """Lost-update regression: ``split`` holds the source lock across
+    its whole read→merge→unlink sequence, so a ``put_raw`` landing a
+    NEWER value mid-migration is serialized behind it and survives on
+    the source instead of being unlinked unseen."""
+    entered, resume = threading.Event(), threading.Event()
+
+    class _GatedDest(_TagStore):
+        # the destination merge is the middle of split's window: gate it
+        # open so a writer can try to race the source while we're inside
+        def _merge_raw(self, mine, theirs):
+            entered.set()
+            assert resume.wait(10)
+            return super()._merge_raw(mine, theirs)
+
+    src = _TagStore(str(tmp_path / "src"))
+    dst = _GatedDest(str(tmp_path / "dst"))
+    key = ("ff" * 8, 2, 32)
+    src.put_raw(key, {"old": 1})
+
+    splitter = threading.Thread(target=lambda: src.split([key], into=dst))
+    splitter.start()
+    assert entered.wait(10)        # split read {"old": 1}, merge in flight
+    writer = threading.Thread(
+        target=lambda: src.put_raw(key, {"old": 1, "new": 1}))
+    writer.start()
+    writer.join(0.3)
+    assert writer.is_alive()       # serialized behind the migration window
+    resume.set()
+    splitter.join(10), writer.join(10)
+    assert not splitter.is_alive() and not writer.is_alive()
+    # the concurrent write landed AFTER the unlink: nothing lost
+    assert src.get_raw(key) == {"old": 1, "new": 1}
+    assert dst.get_raw(key) == {"old": 1}  # migrated snapshot

@@ -1,0 +1,380 @@
+"""RPC transport: frame protocol, config codec, remote replicas, healing.
+
+Process-separated tests spawn real ``python -m repro.serve.rpc``
+children over a RandomForest-backed predictor: tree predictions are
+per-row exact (no BLAS micro-batch-composition wobble in the last ULP),
+so an RPC fleet's verdicts must match an in-process fleet byte-for-byte
+at repo parity precision — ``time_s`` at 1e-12, ``memory_bytes`` at
+1e-6. The chaos test kills one replica with SIGKILL under concurrent
+load and asserts the frontend's full healing story: every in-flight
+Future resolves, the dead member is reshard-excluded, and warm keys are
+served from the migrated on-disk slice with zero re-traces.
+"""
+
+import dataclasses
+import json
+import os
+import socket
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.core.automl.models import RandomForestRegressor
+from repro.core.predictor import DNNAbacus
+from repro.serve import rpc
+from repro.serve.cluster import ClusterFrontend, GatewayReplica
+from repro.serve.prediction_service import config_fingerprint
+from repro.serve.refit import ModelGeneration
+from repro.serve.rpc import (WireConfig, decode_config, encode_config,
+                             pack_frame, read_frame_sock, shutdown_fleet,
+                             spawn_fleet, synthetic_trace)
+from repro.serve.server import ServerStats
+
+from test_prediction_service import _fake_cfg, _records
+
+
+def _rf_abacus(seed=0):
+    """RandomForest-backed predictor: per-row exact predictions, so
+    verdicts are independent of how queries split into micro-batches —
+    the property the byte-for-byte RPC parity assertions need."""
+    fac = lambda s: [RandomForestRegressor(n_trees=10, seed=s)]
+    return DNNAbacus(seed=seed).fit(_records(seed=seed),
+                                    candidate_factory=fac)
+
+
+def _verdict(est):
+    """Parity tuple at repo precision (time @1e-12, mem @1e-6)."""
+    return (est["model"], round(est["time_s"], 12),
+            round(est["memory_bytes"], 6), est["admitted"],
+            est["generation"])
+
+
+def _cfgs(n):
+    return [_fake_cfg(f"job{i:04d}") for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def rf_setup(tmp_path_factory):
+    root = tmp_path_factory.mktemp("rpc")
+    ab = _rf_abacus()
+    path = str(root / "predictor")
+    ab.save(path)
+    return ab, path, str(root)
+
+
+@pytest.fixture(scope="module")
+def pair_fleet(rf_setup):
+    """Two spawned replicas shared by the interface tests (the chaos
+    test spawns its own disposable fleet)."""
+    ab, path, root = rf_setup
+    fleet = spawn_fleet(2, path, os.path.join(root, "pair"),
+                        tracer="repro.serve.rpc:synthetic_trace")
+    yield ab, fleet
+    shutdown_fleet(fleet)
+
+
+# -- frame protocol ----------------------------------------------------------
+
+
+def test_frame_roundtrip_and_pipelining():
+    a, b = socket.socketpair()
+    try:
+        msg = {"id": 1, "op": "ping", "params": {"deep": [1, 2.5, "x"]}}
+        a.sendall(pack_frame(msg))
+        assert read_frame_sock(b) == msg
+        # pipelined frames parse one at a time, in order
+        a.sendall(pack_frame({"id": 2}) + pack_frame({"id": 3}))
+        assert read_frame_sock(b)["id"] == 2
+        assert read_frame_sock(b)["id"] == 3
+        a.close()
+        assert read_frame_sock(b) is None  # clean EOF, not an exception
+    finally:
+        b.close()
+
+
+def test_frame_oversize_rejected_both_directions():
+    with pytest.raises(ValueError, match="exceeds MAX_FRAME"):
+        pack_frame({"blob": "x" * rpc.MAX_FRAME})
+    a, b = socket.socketpair()
+    try:
+        # a hostile/corrupt length header must be refused before any
+        # attempt to allocate/read the payload
+        a.sendall((rpc.MAX_FRAME + 1).to_bytes(4, "big"))
+        with pytest.raises(ValueError, match="exceeds MAX_FRAME"):
+            read_frame_sock(b)
+    finally:
+        a.close(), b.close()
+
+
+# -- config codec ------------------------------------------------------------
+
+
+def test_config_codec_roundtrips_tuples_dicts_and_fingerprint():
+    cfg = _fake_cfg("wire")
+    cfg.shape = (3, (4, 5))        # nested tuples must survive JSON
+    cfg.opts = {"lr": 1e-3, "warmup": (1, 2), "tags": ["a", "b"]}
+    dec = decode_config(json.loads(json.dumps(encode_config(cfg))))
+    assert isinstance(dec, WireConfig)
+    assert dec.shape == (3, (4, 5))
+    assert dec.opts == {"lr": 1e-3, "warmup": (1, 2), "tags": ["a", "b"]}
+    # fingerprints key the TraceStore: the decoded duck must hash the
+    # same or every remote trace would land under a foreign key
+    assert config_fingerprint(dec) == config_fingerprint(cfg)
+
+
+@dataclasses.dataclass
+class _DcCfg:
+    name: str = "dc"
+    family: str = "dense"
+    num_layers: int = 3
+    d_model: int = 32
+    widen: tuple = (1, 2)
+
+
+def test_config_codec_dataclass_roundtrip():
+    cfg = _DcCfg()
+    dec = decode_config(json.loads(json.dumps(encode_config(cfg))))
+    assert isinstance(dec, _DcCfg) and dec == cfg
+    assert config_fingerprint(dec) == config_fingerprint(cfg)
+
+
+def test_config_codec_rejects_unserializable():
+    cfg = _fake_cfg("bad")
+    cfg.blob = object()
+    with pytest.raises(TypeError, match="not wire-serializable"):
+        encode_config(cfg)
+    cfg2 = _fake_cfg("badkeys")
+    cfg2.table = {1: "x"}
+    with pytest.raises(TypeError, match="str keys"):
+        encode_config(cfg2)
+
+
+def test_synthetic_trace_is_deterministic():
+    a = synthetic_trace(_fake_cfg("det"), 4, 32)
+    b = synthetic_trace(_fake_cfg("det"), 4, 32)
+    assert a == b  # byte-identical across calls (and thus processes)
+    assert synthetic_trace(_fake_cfg("other"), 4, 32) != a
+
+
+# -- remote replica interface ------------------------------------------------
+
+
+def test_remote_fleet_matches_in_process_byte_for_byte(pair_fleet):
+    ab, fleet = pair_fleet
+    queries = [(cfg, 2 + 2 * (i % 2), 32) for i, cfg in enumerate(_cfgs(12))]
+    remote_fe = ClusterFrontend(replicas=fleet)
+    remote_fe.start()
+    got = [_verdict(e) for e in remote_fe.predict_many(queries, timeout=60)]
+    with ClusterFrontend(ab, n_replicas=2, tracer=synthetic_trace) as local:
+        want = [_verdict(e) for e in local.predict_many(queries, timeout=60)]
+    assert got == want
+    # repeat queries hit the remote caches: still identical
+    again = [_verdict(e) for e in remote_fe.predict_many(queries, timeout=60)]
+    assert again == want
+
+
+def test_remote_stats_attribute_and_callable_views(pair_fleet):
+    _, fleet = pair_fleet
+    rem = fleet[0]
+    rem.predict_one(_fake_cfg("statq"), 2, 32, timeout=30)
+    # attribute access mirrors ServerStats counters over the wire
+    assert rem.stats.ticks >= 1 and rem.stats.completed >= 1
+    assert rem.stats.mean_batch > 0
+    d = rem.stats.as_dict()
+    assert set(f.name for f in dataclasses.fields(ServerStats)) <= set(d)
+    # callable view: full stats dict, calibration keys un-stringified
+    full = rem.stats()
+    assert full["ticks"] == d["ticks"] or full["ticks"] >= d["ticks"]
+    assert all(k is None or isinstance(k, int)
+               for k in full["calibration"].get("by_generation", {}))
+    info = rem.server_info()
+    assert info["running"] is True and "queued" in info
+
+
+def test_remote_stop_and_start_over_the_wire(pair_fleet):
+    _, fleet = pair_fleet
+    rem = fleet[1]
+    assert rem.running
+    rem.stop(timeout=10)
+    assert not rem.running and not rem.draining
+    rem.start()
+    assert rem.running
+    assert np.isfinite(rem.predict_one(_fake_cfg("restart"), 2, 32,
+                                       timeout=30)["time_s"])
+
+
+def test_remote_observe_lands_in_shared_disk_slice(pair_fleet):
+    _, fleet = pair_fleet
+    fe = ClusterFrontend(replicas=fleet)
+    fe.start()
+    cfg = _fake_cfg("observed")
+    est = fe.predict_one(cfg, 2, 32, timeout=30)
+    before = {r.name: r.feedback.total(rescan=True) for r in fleet}
+    fe.observe(cfg, 2, 32, est["time_s"] * 1.1, est["memory_bytes"],
+               predicted_time_s=est["time_s"],
+               predicted_mem_bytes=est["memory_bytes"],
+               generation=est["generation"], job_id="j1")
+    # the server process wrote through the SAME directory the stub's
+    # local FeedbackStore handle reads: exactly one replica gained one
+    after = {r.name: r.feedback.total(rescan=True) for r in fleet}
+    gained = {n: after[n] - before[n] for n in after if after[n] != before[n]}
+    assert sum(gained.values()) == 1
+    # and the owning replica's calibration window saw the completion
+    owner = fe.replica_for(config_fingerprint(cfg))
+    assert owner.stats()["calibration"]["count"] >= 1
+
+
+def test_publish_generation_and_snapshot_over_the_wire(pair_fleet):
+    ab, fleet = pair_fleet
+    rem = fleet[0]
+    # snapshot is the serialization seam: byte-identical to the source
+    snap, gen0 = rem.service.snapshot()
+    assert snap.to_dict() == ab.to_dict()
+    gen = ModelGeneration(number=gen0 + 7, abacus=_rf_abacus(seed=1),
+                          n_feedback=5, source="test")
+    swaps_before = rem.stats.gen_swaps
+    assert rem.publish_generation(gen)
+    deadline = time.monotonic() + 10
+    while rem.service.generation < gen.number:
+        assert time.monotonic() < deadline, "generation never adopted"
+        time.sleep(0.05)
+    assert rem.stats.gen_swaps == swaps_before + 1
+    # estimates now stamp the adopted generation
+    est = rem.predict_one(_fake_cfg("gen"), 2, 32, timeout=30)
+    assert est["generation"] == gen.number
+    # a predictor that cannot serialize is refused loudly, not half-sent
+    bad = ModelGeneration(number=gen.number + 1, abacus=object())
+    with pytest.raises(TypeError, match="to_dict"):
+        rem.publish_generation(bad)
+
+
+# -- chaos: kill -9 under load -----------------------------------------------
+
+
+def test_killed_replica_is_excluded_and_fleet_heals(rf_setup, tmp_path):
+    ab, path, _ = rf_setup
+    queries = [(cfg, 2 + 2 * (i % 2), 32) for i, cfg in enumerate(_cfgs(24))]
+    with ClusterFrontend(ab, n_replicas=4, tracer=synthetic_trace) as local:
+        want = [_verdict(e) for e in local.predict_many(queries, timeout=60)]
+
+    fleet = spawn_fleet(4, path, str(tmp_path),
+                        tracer="repro.serve.rpc:synthetic_trace",
+                        heartbeat_interval=0.25, heartbeat_misses=2)
+    fe = ClusterFrontend(replicas=fleet, hedge_after_s=0.75,
+                         reshard_timeout=30)
+    try:
+        fe.start()
+        # warm every key on its owner (traces write through to disk)
+        got = [_verdict(e) for e in fe.predict_many(queries, timeout=60)]
+        assert got == want  # pre-kill byte-for-byte parity
+        victim = fe.replica_for(config_fingerprint(queries[0][0]))
+        survivors = [r for r in fleet if r.name != victim.name]
+
+        # concurrent load while the victim dies mid-flight
+        futs, flock = [], threading.Lock()
+        stop_load = threading.Event()
+
+        def load():
+            while not stop_load.is_set():
+                for cfg, batch, seq in queries:
+                    try:
+                        f = fe.submit(cfg, batch, seq)
+                    except Exception as e:  # pragma: no cover - must not
+                        f = Future()
+                        f.set_exception(e)
+                    with flock:
+                        futs.append(f)
+                time.sleep(0.01)
+
+        threads = [threading.Thread(target=load) for _ in range(3)]
+        for t in threads:
+            t.start()
+        time.sleep(0.3)
+        victim.kill()  # SIGKILL: no drain, no goodbye
+        # auto-exclusion reshards the dead member out
+        deadline = time.monotonic() + 20
+        while victim.name in fe._by_name:
+            assert time.monotonic() < deadline, "victim never excluded"
+            time.sleep(0.1)
+        time.sleep(0.5)  # a little post-heal load through the new ring
+        stop_load.set()
+        for t in threads:
+            t.join(30)
+
+        # EVERY in-flight future resolves (hedged, retried, or replayed)
+        # to the same byte-exact verdicts the in-process fleet produced
+        assert len(futs) > 0
+        results = [f.result(60) for f in futs]
+        want_by_model = {w[0]: w for w in want}  # job names are unique
+        assert all(_verdict(r) == want_by_model[r["model"]]
+                   for r in results)
+
+        st = fe.stats()
+        assert st["reshard"]["exclusions"] == 1
+        assert victim.dead and len(fe.replicas) == 3
+        assert all(not r.dead for r in survivors)
+
+        # post-heal: warm keys serve from the migrated slices with ZERO
+        # re-traces, and verdicts still match the in-process fleet
+        cold_before = fe.stats()["fleet"]["cold_traces"]
+        healed = [_verdict(e) for e in fe.predict_many(queries, timeout=60)]
+        assert healed == want
+        assert fe.stats()["fleet"]["cold_traces"] == cold_before
+    finally:
+        shutdown_fleet(fleet)
+
+
+# -- hedging -----------------------------------------------------------------
+
+
+class _StalledReplica:
+    """Transport-shaped replica whose submits never resolve: the
+    frontend's hedge timer is the only way a query routed here ever
+    answers."""
+
+    supports_hedge = True
+    running = True
+    draining = False
+
+    def __init__(self, name="s0"):
+        self.name = name
+        self.dead = False
+        self.on_dead = None
+        self.stats = ServerStats()
+        self.feedback = None
+        self.service = None
+        self.submissions = 0
+
+    def submit(self, cfg, batch, seq, fp=None):
+        self.submissions += 1
+        return Future()  # black hole
+
+    def submit_many(self, queries):
+        return [self.submit(None, 0, 0) for _ in queries]
+
+    def start(self):
+        return self
+
+    def stop(self, timeout=None):
+        pass
+
+
+def test_hedge_duplicates_slow_query_to_next_ring_owner():
+    stalled = _StalledReplica("s0")
+    gw = GatewayReplica("g1", _rf_abacus(), tracer=synthetic_trace)
+    fe = ClusterFrontend(replicas=[stalled, gw], hedge_after_s=0.05,
+                         auto_exclude=False)
+    fe.start()
+    try:
+        cfg = next(c for c in _cfgs(64)
+                   if fe.ring.route(config_fingerprint(c)) == "s0")
+        fut = fe.submit(cfg, 2, 32)
+        est = fut.result(10)  # resolved by the hedge, not the primary
+        assert est["replica"] == "g1" and np.isfinite(est["time_s"])
+        assert stalled.submissions == 1  # primary did get the query first
+        assert fe.reshard_stats["hedges"] >= 1
+    finally:
+        gw.stop()

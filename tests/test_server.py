@@ -326,3 +326,100 @@ def test_store_write_failure_degrades_to_memory_cache(tmp_path):
     assert svc.stats.store_errors == 1
     svc.predict_one(_fake_cfg(), 2, 32)  # memory cache still serves it
     assert len(calls) == 1 and svc.stats.hits == 1
+
+
+# -- stats / lifecycle regressions (serve-layer fixes) ------------------------
+
+
+def test_mean_batch_counts_failed_queries():
+    """An all-failing micro-batch still coalesced queries: mean_batch
+    must report (completed + failed) / ticks, not drop to zero."""
+    _, svc = _served()
+
+    def broken_tracer(cfg, batch, seq):
+        raise ValueError("untraceable")
+
+    svc._tracer = broken_tracer
+    with AbacusServer(svc) as srv:
+        futs = srv.submit_many([(_fake_cfg(f"bad{i}"), 2, 32)
+                                for i in range(3)])
+        for f in futs:
+            with pytest.raises(ValueError):
+                f.result(10)
+    st = srv.stats
+    assert st.completed == 0 and st.failed == 3 and st.ticks >= 1
+    assert st.mean_batch == pytest.approx((st.completed + st.failed)
+                                          / st.ticks)
+    assert st.mean_batch > 0.0
+
+
+def test_direct_adopt_counts_gen_swap():
+    """publish_generation on a bare (no-worker) server adopts directly;
+    that swap must land in stats.gen_swaps like a tick-boundary swap."""
+    from repro.serve.refit import ModelGeneration
+
+    _, svc = _served()
+    srv = AbacusServer(svc)  # never started: the direct-adopt path
+    gen = ModelGeneration(number=svc.generation + 1, abacus=_abacus(seed=1))
+    assert srv.publish_generation(gen) is True
+    assert srv.stats.gen_swaps == 1
+    assert svc.generation == gen.number
+    # a stale republish is refused and must NOT count another swap
+    assert srv.publish_generation(gen) is False
+    assert srv.stats.gen_swaps == 1
+
+
+def test_observation_count_exact_under_concurrent_observers():
+    _, svc = _served()
+    srv = AbacusServer(svc)
+    n_threads, per = 8, 200
+    gate = threading.Barrier(n_threads)
+
+    def hammer():
+        gate.wait()
+        for _ in range(per):
+            srv.observe(_fake_cfg(), 2, 32, time_s=0.01, mem_bytes=1e6)
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert srv.stats.observations == n_threads * per
+
+
+def test_stop_timeout_leaves_worker_draining_then_second_stop_tears_down():
+    """stop(timeout) returning with the worker mid-tick must leave the
+    server observably draining, refuse a restart, and let a second
+    stop() finish the teardown once the worker exits."""
+    calls = []
+    base = _counting_tracer(calls)
+    started, release = threading.Event(), threading.Event()
+
+    def gated_tracer(cfg, batch, seq):
+        started.set()
+        assert release.wait(20)
+        return base(cfg, batch, seq)
+
+    _, svc = _served()
+    svc._tracer = gated_tracer
+    srv = AbacusServer(svc).start()
+    try:
+        fut = srv.submit(_fake_cfg("slow"), 2, 32)
+        assert started.wait(5)          # worker is blocked mid-tick
+        srv.stop(timeout=0.05)          # expires before the trace finishes
+        assert not srv.running
+        assert srv.draining             # worker alive past the join timeout
+        with pytest.raises(RuntimeError, match="draining"):
+            srv.start()                 # restart refused while draining
+        release.set()
+        assert np.isfinite(fut.result(10)["time_s"])  # drain still serves it
+        srv.stop(timeout=10)            # second stop completes the teardown
+        assert not srv.draining and srv._worker is None and srv._pool is None
+        # fully torn down: a fresh start serves again
+        srv.start()
+        assert np.isfinite(srv.predict_one(_fake_cfg("again"), 2, 32)
+                           ["time_s"])
+    finally:
+        release.set()
+        srv.stop()
