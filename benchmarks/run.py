@@ -28,6 +28,7 @@ BENCHES = [
     ("cluster", "benchmarks.bench_cluster"),            # sharded replica fleet
     ("reshard", "benchmarks.bench_reshard"),            # elastic resharding
     ("rpc", "benchmarks.bench_rpc"),                    # RPC fleet chaos
+    ("obs", "benchmarks.bench_obs"),                    # telemetry plane
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
 
@@ -40,7 +41,7 @@ def main(argv=None) -> int:
     for name, module in BENCHES:
         if args.only and args.only != name:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         print(f"# === {name} ({module}) ===", flush=True)
         try:
             mod = __import__(module, fromlist=["run"])
@@ -50,7 +51,10 @@ def main(argv=None) -> int:
             failures += 1
             print(f"# {name} FAILED:", file=sys.stderr)
             traceback.print_exc()
-        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+        wall = time.perf_counter() - t0
+        # machine-readable wall time next to the benchmark's own rows
+        print(f"{name}.wall_s,{wall:.6g}")
+        print(f"# {name} done in {wall:.0f}s", flush=True)
     return 1 if failures else 0
 
 

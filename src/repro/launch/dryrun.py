@@ -233,6 +233,15 @@ def main(argv=None) -> int:
                          "the TCP frame transport; a crashed replica is "
                          "auto-excluded and its warm slice rebuilt from "
                          "disk by the surviving owners")
+    ap.add_argument("--metrics-out", default=None,
+                    help="with --predict: write the serving metrics "
+                         "snapshot here at sweep end (.prom/.txt -> "
+                         "Prometheus text exposition, else JSON)")
+    ap.add_argument("--events-out", default=None,
+                    help="with --predict: append structured JSONL "
+                         "lifecycle events (gen swaps, reshards, "
+                         "exclusions, refits) to this file; RPC children "
+                         "append to the same file")
     args = ap.parse_args(argv)
 
     service = server = None
@@ -243,9 +252,13 @@ def main(argv=None) -> int:
         args.rpc = False
     if args.predict:
         from repro.core.predictor import DNNAbacus
+        from repro.obs import events
         from repro.serve.feedback_store import FeedbackStore
         from repro.serve.server import AbacusServer
         from repro.serve.trace_store import TraceStore
+        if args.events_out:
+            # O_APPEND one-line writes: RPC children share the same file
+            events.configure(path=args.events_out)
         if os.path.exists(args.predictor_path + ".json"):
             if args.rpc:
                 # process-separated fleet: each gateway is its own
@@ -264,7 +277,8 @@ def main(argv=None) -> int:
                                         if args.trace_store else None),
                             feedback_root=(
                                 os.path.join(args.feedback_store, name)
-                                if args.feedback_store else None)))
+                                if args.feedback_store else None),
+                            event_log=args.events_out or None))
                 except BaseException:
                     shutdown_fleet(rpc_fleet)
                     raise
@@ -355,6 +369,22 @@ def main(argv=None) -> int:
                 print(f"[dryrun] reshards={reshard['reshards']} "
                       f"keys_moved={reshard['keys_moved']} "
                       f"replayed={reshard['keys_replayed']}", file=sys.stderr)
+            if args.metrics_out:
+                # snapshot BEFORE stop(): a fleet frontend fetches each
+                # replica's registry over RPC, so the fleet must be alive
+                try:
+                    if args.metrics_out.endswith((".prom", ".txt")):
+                        body = server.metrics_text()
+                    else:
+                        body = json.dumps(server.metrics_snapshot(),
+                                          indent=2, sort_keys=True)
+                    with open(args.metrics_out, "w") as f:
+                        f.write(body + "\n")
+                    print(f"[dryrun] metrics snapshot -> {args.metrics_out}",
+                          file=sys.stderr)
+                except Exception as e:
+                    print(f"[dryrun] metrics snapshot failed: "
+                          f"{type(e).__name__}: {e}", file=sys.stderr)
             server.stop()
         if rpc_fleet:
             from repro.serve.rpc import shutdown_fleet

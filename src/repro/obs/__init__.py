@@ -1,0 +1,43 @@
+"""repro.obs — fleet telemetry plane (metrics, tracing, events).
+
+Dependency-free observability for the serving stack:
+
+- :mod:`repro.obs.metrics` — registry of counters/gauges/histograms with
+  order-independent snapshot merging and Prometheus text rendering.
+- :mod:`repro.obs.tracing` — per-query spans with cross-process trace
+  context (carried in RPC submit frames).
+- :mod:`repro.obs.events` — structured JSONL event log for lifecycle
+  events (gen swaps, reshards, exclusions, refits, heartbeat deaths).
+"""
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    CounterDict,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    merge_snapshots,
+    quantile_from_buckets,
+    render_prometheus,
+)
+from repro.obs.tracing import SpanSink, make_span, new_context, new_id
+from repro.obs.events import EventLog
+from repro.obs import events
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "Counter",
+    "CounterDict",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "merge_snapshots",
+    "quantile_from_buckets",
+    "render_prometheus",
+    "SpanSink",
+    "make_span",
+    "new_context",
+    "new_id",
+    "EventLog",
+    "events",
+]

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -61,11 +62,25 @@ class AdmissionController:
 
     def __init__(self, predictor, machines: Sequence[Machine],
                  plan: str = "ga", time_scale: float = 1.0,
-                 mem_pad: float = 0.0, **plan_kw):
+                 mem_pad: float = 0.0, metrics=None, **plan_kw):
         if plan not in self.ASSIGNING_PLANS:
             raise ValueError(
                 f"plan {plan!r} does not produce an assignment; "
                 f"choose from {self.ASSIGNING_PLANS}")
+        # admission outcomes on the shared registry (the predictor's, if
+        # it has one): exposed alongside the serving metrics so operator
+        # dashboards see admit/reject rates next to query latency.
+        from repro.obs.metrics import MetricsRegistry
+        self.metrics = (metrics if metrics is not None
+                        else getattr(predictor, "metrics", None)
+                        or MetricsRegistry())
+        self._c_admitted = self.metrics.counter("admission_admitted_total")
+        self._c_rejected = self.metrics.counter("admission_rejected_total")
+        self._c_completions = self.metrics.counter(
+            "admission_completions_total")
+        self._h_wave = self.metrics.histogram(
+            "admission_wave_seconds",
+            help="wall time to place one wave of queries")
         self.predictor = predictor
         self.machines = list(machines)
         self.plan = plan
@@ -87,6 +102,7 @@ class AdmissionController:
         qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
         if not qs:
             return []
+        t_wave = time.perf_counter()
         ests = self.predictor.predict_many(qs)
         names = [f"{e['model']}#{next(self._ids)}" for e in ests]
         jobs = jobs_from_estimates(
@@ -145,6 +161,10 @@ class AdmissionController:
                         job_id=job.name, model=ests[i]["model"],
                         admitted=True, machine=m.name,
                         time_s=job.time_s, mem_bytes=job.mem_bytes)
+            n_adm = sum(1 for v in verdicts if v.admitted)
+            self._c_admitted.inc(n_adm)
+            self._c_rejected.inc(len(verdicts) - n_adm)
+        self._h_wave.observe(time.perf_counter() - t_wave)
         return verdicts
 
     def complete(self, job_id: str) -> None:
@@ -177,6 +197,7 @@ class AdmissionController:
             self._busy[k] = max(0.0, self._busy[k]
                                 - job.time_s / self.machines[k].speed)
             self._reserved[k] = max(0.0, self._reserved[k] - job.mem_bytes)
+            self._c_completions.inc()
         raw_t = None if time_s is None else float(time_s) / self.time_scale
         raw_m = (None if mem_bytes is None
                  else max(0.0, float(mem_bytes) - self.mem_pad))

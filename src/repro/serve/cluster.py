@@ -57,6 +57,10 @@ import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import events
+from repro.obs.metrics import (CounterDict, MetricsRegistry, merge_snapshots,
+                               render_prometheus)
+from repro.obs.tracing import SpanSink, make_span, new_context
 from repro.serve.feedback_store import FeedbackStore
 from repro.serve.prediction_service import (PredictionService, Query,
                                             config_fingerprint, trace_query)
@@ -405,10 +409,19 @@ class ClusterFrontend:
         self._draining: set = set()   # replica names quiesced mid-reshard
         self._started = False
         self.reshard_timeout = float(reshard_timeout)
-        self.reshard_stats = {"reshards": 0, "keys_moved": 0,
-                              "units_moved": 0, "keys_skipped": 0,
-                              "keys_replayed": 0, "cutover_ticks": 0,
-                              "hedges": 0, "retries": 0, "exclusions": 0}
+        # frontend-local registry: the reshard/hedge/retry counters live
+        # here (CounterDict keeps the dict mutation surface, so
+        # `reshard_stats["hedges"] += 1` and `dict(reshard_stats)` are
+        # unchanged); metrics_snapshot() merges it with every replica's.
+        self.metrics = MetricsRegistry()
+        self.span_sink = SpanSink()
+        self.reshard_stats = CounterDict(
+            self.metrics, "fleet_",
+            ("reshards", "keys_moved", "units_moved", "keys_skipped",
+             "keys_replayed", "cutover_ticks", "hedges", "hedge_failures",
+             "retries", "exclusions"))
+        self.metrics.register_callback(
+            lambda: {"fleet_replicas": len(self.replicas)})
         # failure handling for transport-backed replicas (repro.serve.rpc):
         # hedge_after_s duplicates a slow query to the next ring owner,
         # max_retries bounds re-routes of failed submits, auto_exclude
@@ -495,10 +508,26 @@ class ClusterFrontend:
                                f"{self.reshard_timeout}s; query not replayed")
 
     # -- client API ---------------------------------------------------------
-    def submit(self, cfg, batch: int, seq: int) -> Future:
-        """Route one query to its shard; fingerprint computed ONCE here."""
+    def submit(self, cfg, batch: int, seq: int, trace: bool = False) -> Future:
+        """Route one query to its shard; fingerprint computed ONCE here.
+
+        ``trace=True`` opts the query into per-stage span recording: a
+        trace context rides the query (across the RPC boundary for
+        remote replicas), every stage stamps spans with one trace id,
+        and ``trace_spans(fut.trace_id)`` returns the assembled trace
+        once the future resolves."""
         fp = config_fingerprint(cfg)
-        return self._submit_query(Query(cfg, int(batch), int(seq), fp=fp))
+        tc = new_context() if trace else None
+        t0 = time.perf_counter() if trace else 0.0
+        fut = self._submit_query(Query(cfg, int(batch), int(seq),
+                                       fp=fp, tc=tc))
+        if tc is not None:
+            # the root span: frontend accepted + routed the query
+            self.span_sink.record(make_span(
+                tc["trace"], "submit", time.perf_counter() - t0,
+                span_id=tc["span"], ts=time.time(), fp=fp))
+            fut.trace_id = tc["trace"]
+        return fut
 
     def _pick_owner(self, fp: str, avoid: frozenset):
         """Owning replica for ``fp``, skipping avoided and dead members.
@@ -531,7 +560,11 @@ class ClusterFrontend:
                         f"no live replica owns {q.fp!r} "
                         f"(avoided={sorted(avoid)})")
                 try:
-                    fut = replica.submit(q.cfg, q.batch, q.seq, fp=q.fp)
+                    if q.tc is None:
+                        fut = replica.submit(q.cfg, q.batch, q.seq, fp=q.fp)
+                    else:
+                        fut = replica.submit(q.cfg, q.batch, q.seq,
+                                             fp=q.fp, tc=q.tc)
                 except ReplicaUnavailable:
                     # owner died between the dead-check and the send:
                     # fall through to its ring successor immediately
@@ -545,6 +578,12 @@ class ClusterFrontend:
                     continue
                 if parked:  # counted once per query, not per wakeup
                     self.reshard_stats["keys_replayed"] += 1
+                if q.tc is not None:
+                    name = "replay" if parked else "route"
+                    self.span_sink.record(make_span(
+                        q.tc["trace"], name, 0.0, parent=q.tc["span"],
+                        replica=replica.name, epoch=epoch))
+                    fut.add_done_callback(self._harvest_spans)
                 if getattr(replica, "supports_hedge", False):
                     return self._guard(q, fut, replica.name, attempts)
                 return fut
@@ -615,6 +654,10 @@ class ClusterFrontend:
                     except RuntimeError:
                         pass  # cutover never came: fall back to avoidance
                 self.reshard_stats["retries"] += 1
+            if q.tc is not None:
+                self.span_sink.record(make_span(
+                    q.tc["trace"], "retry", 0.0, parent=q.tc["span"],
+                    avoided=sorted(avoid)))
             inner = self._submit_query(q, avoid=frozenset(avoid),
                                        attempts=attempts)
         except Exception as e:
@@ -623,16 +666,30 @@ class ClusterFrontend:
         inner.add_done_callback(lambda f: _relay(f, out))
 
     def _hedge(self, q: Query, out: Future, primary: str) -> None:
-        """Duplicate a slow query to the next ring owner (first wins)."""
+        """Duplicate a slow query to the next ring owner (first wins).
+
+        The hedge counter moves only AFTER the duplicate submit
+        succeeded: a hedge whose submission raises (every successor
+        excluded, say) never reached another replica, and counting it
+        as issued made ``hedges`` overstate real duplicates. Failed
+        attempts are tallied separately under ``hedge_failures``.
+        """
         if out.done():
             return
-        with self._route_lock:
-            self.reshard_stats["hedges"] += 1
         try:
             inner = self._submit_query(q, avoid=frozenset({primary}),
                                        attempts=0)
         except Exception:
-            return  # the primary may still answer; never fail out here
+            # the primary may still answer; never fail out here
+            with self._route_lock:
+                self.reshard_stats["hedge_failures"] += 1
+            return
+        with self._route_lock:
+            self.reshard_stats["hedges"] += 1
+        if q.tc is not None:
+            self.span_sink.record(make_span(
+                q.tc["trace"], "hedge", 0.0, parent=q.tc["span"],
+                primary=primary))
         inner.add_done_callback(lambda f: _relay(f, out))
 
     def submit_many(self, queries: Sequence) -> List[Future]:
@@ -665,6 +722,8 @@ class ClusterFrontend:
                     try:
                         for i, fut in zip(idxs, replica
                                           .submit_many([qs[i] for i in idxs])):
+                            if qs[i].tc is not None:
+                                fut.add_done_callback(self._harvest_spans)
                             futs[i] = (self._guard(qs[i], fut, name,
                                                    self.max_retries)
                                        if getattr(replica, "supports_hedge",
@@ -686,6 +745,31 @@ class ClusterFrontend:
         for i in singles:
             futs[i] = self._submit_query(qs[i])
         return futs  # type: ignore[return-value]
+
+    def _harvest_spans(self, fut: Future) -> None:
+        """Collect server-side spans shipped back inside a traced
+        estimate (``est["_trace"]``) into the frontend's sink — for a
+        remote replica these crossed the process boundary, so the sink
+        ends up holding one coherent cross-process trace."""
+        try:
+            if fut.cancelled() or fut.exception() is not None:
+                return
+            est = fut.result()
+        except Exception:
+            return
+        if isinstance(est, dict):
+            # pop, not get: the shipping envelope is transport detail,
+            # not part of the estimate callers see. Done-callbacks run
+            # before result() wakes waiters, so callers never observe
+            # the key either way.
+            spans = est.pop("_trace", None)
+            if spans:
+                self.span_sink.extend(spans)
+
+    def trace_spans(self, trace_id: str) -> List[Dict]:
+        """Every span harvested for one trace id (frontend + replicas),
+        ordered by start timestamp."""
+        return self.span_sink.for_trace(trace_id)
 
     def predict_one(self, cfg, batch: int, seq: int,
                     timeout: Optional[float] = None) -> Dict:
@@ -789,6 +873,9 @@ class ClusterFrontend:
         summary = self._reshard(plan)
         with self._route_lock:
             self.reshard_stats["exclusions"] += 1
+        events.emit("exclusion", replica=name,
+                    keys_moved=summary.get("keys_moved", 0),
+                    members=summary.get("to", []))
         if doomed is not None and hasattr(doomed, "close"):
             try:
                 doomed.close()
@@ -959,6 +1046,11 @@ class ClusterFrontend:
                   "cutover_ticks"):
             self.reshard_stats[k] += summary[k]
         self.reshard_stats["reshards"] += 1
+        events.emit("reshard", members_from=summary["from"],
+                    members_to=summary["to"],
+                    keys_moved=summary["keys_moved"],
+                    keys_skipped=summary["keys_skipped"],
+                    cutover_ticks=summary["cutover_ticks"])
         return summary
 
     def _cutover_swap(self, names: Sequence[str], new_ring: HashRing,
@@ -1097,7 +1189,7 @@ class ClusterFrontend:
 
     @staticmethod
     def _sum_counters(per: Dict[str, Dict]) -> Dict:
-        counters = [f.name for f in dataclasses.fields(ServerStats)]
+        counters = ServerStats.COUNTERS
         fleet = {c: sum(p.get(c, 0) for p in per.values()) for c in counters}
         # max_batch is a high-water mark, not additive
         fleet["max_batch"] = max((p.get("max_batch", 0)
@@ -1106,7 +1198,13 @@ class ClusterFrontend:
 
     def stats(self) -> Dict:
         """Fleet-wide view: summed counters, merged calibration, refit,
-        and the lifetime resharding/migration counters."""
+        and the lifetime resharding/migration counters.
+
+        ``stale_replicas`` lists members whose contribution is a cached
+        fallback (a dead ``RemoteReplica`` serving its last-known
+        counters, stamped ``{"stale": true, ...}``) — the fleet sums
+        include those cached numbers, so consumers can tell live truth
+        from a dead member's last words."""
         per = {r.name: r.stats() for r in self.replicas}
         fleet = self._sum_counters(per)
         out = {
@@ -1118,6 +1216,8 @@ class ClusterFrontend:
             "calibration": merge_calibration(
                 [p.get("calibration", {}) for p in per.values()]),
             "per_replica": per,
+            "stale_replicas": sorted(name for name, p in per.items()
+                                     if p.get("stale")),
         }
         if self.refitter is not None:
             out["refit"] = self.refitter.info()
@@ -1126,3 +1226,29 @@ class ClusterFrontend:
         if self.feedback is not None:
             out["feedback"] = self.feedback.info()
         return out
+
+    def metrics_snapshot(self) -> Dict:
+        """Fleet-merged registry snapshot: the frontend's own counters
+        plus every reachable replica's (counters sum, gauges max,
+        histogram buckets add — replica order cannot change the
+        result). Unreachable members are skipped and counted in the
+        ``fleet_unreachable`` gauge."""
+        snaps = [self.metrics.snapshot()]
+        unreachable = 0
+        for r in list(self.replicas):
+            fn = getattr(r, "metrics_snapshot", None)
+            if fn is None:
+                continue
+            try:
+                snaps.append(fn())
+            except Exception:
+                unreachable += 1
+        merged = merge_snapshots(snaps)
+        merged["fleet_unreachable"] = {"type": "gauge",
+                                       "value": unreachable}
+        return merged
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of :meth:`metrics_snapshot`."""
+        return render_prometheus(self.metrics_snapshot(),
+                                 namespace=self.metrics.namespace)

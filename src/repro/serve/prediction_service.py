@@ -48,11 +48,17 @@ class Query:
     cluster frontend fingerprints each query once to route it, and the
     owning replica reuses that key instead of re-hashing the config
     (the fingerprint is the hot path's dominant per-query cost).
+
+    ``tc`` optionally carries a trace context
+    (``{"trace": id, "span": root}``, see :mod:`repro.obs.tracing`);
+    it rides the query across process boundaries so every stage stamps
+    spans into one coherent per-query trace.
     """
     cfg: Any  # ModelConfig
     batch: int
     seq: int
     fp: Optional[str] = None  # precomputed config fingerprint
+    tc: Optional[Dict] = None  # trace context (repro.obs.tracing)
 
     def key(self) -> Optional[CacheKey]:
         """Cache key when the fingerprint was precomputed, else None."""
@@ -156,32 +162,65 @@ def trace_query(cfg, batch: int, seq: int) -> ProfileRecord:
         nsm_edges=edges)
 
 
-@dataclasses.dataclass
 class ServiceStats:
-    hits: int = 0         # served from the in-memory cache
-    misses: int = 0       # not in memory (filled by store load or trace)
-    evictions: int = 0
-    store_hits: int = 0     # misses answered by the persistent TraceStore
-    traces: int = 0         # misses that actually ran the tracer
-    store_errors: int = 0   # failed write-throughs (served memory-only)
-    est_hits: int = 0       # queries served from the prediction cache
-    adopts: int = 0         # generations adopted (prediction cache cleared)
+    """Cache counters, refactored onto a ``MetricsRegistry``.
+
+    Byte-compatible with the dataclass it replaces: attribute access
+    and ``+=`` mutate registry counters (``service_hits_total``, ...),
+    ``as_dict()`` keeps the same keys including the derived ``queries``,
+    and keyword construction (``ServiceStats(hits=3)``) still works.
+    Counters are unlocked — callers mutate them under
+    ``PredictionService._lock`` exactly as before.
+
+    - hits: served from the in-memory cache
+    - misses: not in memory (filled by store load or trace)
+    - store_hits: misses answered by the persistent TraceStore
+    - traces: misses that actually ran the tracer
+    - store_errors: failed write-throughs (served memory-only)
+    - est_hits: queries served from the prediction cache
+    - adopts: generations adopted (prediction cache cleared)
+    """
+
+    COUNTERS = ("hits", "misses", "evictions", "store_hits", "traces",
+                "store_errors", "est_hits", "adopts")
+
+    def __init__(self, registry=None, **initial):
+        from repro.obs.metrics import MetricsRegistry
+        object.__setattr__(self, "_metrics", {})
+        registry = registry if registry is not None else MetricsRegistry()
+        object.__setattr__(self, "registry", registry)
+        metrics = self.__dict__["_metrics"]
+        for name in self.COUNTERS:
+            metrics[name] = registry.counter(f"service_{name}_total")
+        for k, v in initial.items():
+            setattr(self, k, v)
+
+    def __getattr__(self, name):
+        metrics = self.__dict__.get("_metrics")
+        if metrics is not None and name in metrics:
+            return metrics[name].value
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        metrics = self.__dict__.get("_metrics")
+        if metrics is not None and name in metrics:
+            metrics[name].set(value)
+        else:
+            object.__setattr__(self, name, value)
 
     @property
     def queries(self) -> int:
         return self.hits + self.misses
 
     def as_dict(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "store_hits": self.store_hits,
-                "traces": self.traces, "store_errors": self.store_errors,
-                "est_hits": self.est_hits, "adopts": self.adopts,
-                "queries": self.queries}
+        metrics = self.__dict__["_metrics"]
+        d = {name: metrics[name].value for name in self.COUNTERS}
+        d["queries"] = d["hits"] + d["misses"]
+        return d
 
     def reset(self) -> None:
-        self.hits = self.misses = self.evictions = 0
-        self.store_hits = self.traces = self.store_errors = 0
-        self.est_hits = self.adopts = 0
+        for name in self.COUNTERS:
+            setattr(self, name, 0)
 
 
 class PredictionService:
@@ -190,7 +229,8 @@ class PredictionService:
     def __init__(self, abacus, max_cache_entries: int = 1024,
                  hbm_budget: float = HBM_PER_DEVICE,
                  tracer: Callable[..., ProfileRecord] = trace_query,
-                 store=None, cache_predictions: bool = True):
+                 store=None, cache_predictions: bool = True, metrics=None):
+        from repro.obs.metrics import MetricsRegistry
         self.abacus = abacus
         self.hbm_budget = float(hbm_budget)
         self.max_cache_entries = max_cache_entries
@@ -200,7 +240,13 @@ class PredictionService:
         self._cache: "OrderedDict[CacheKey, ProfileRecord]" = OrderedDict()
         self._inflight: Dict[CacheKey, threading.Event] = {}
         self._lock = threading.Lock()
-        self.stats = ServiceStats()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = ServiceStats(self.metrics)
+        # computed gauges, snapshot-time only: never touched on the hot path
+        self.metrics.register_callback(
+            lambda: {"service_cache_entries": len(self._cache),
+                     "service_est_entries": len(self._est_cache),
+                     "service_generation": self.generation})
         # model generation (bumped by adopt()) + per-generation prediction
         # cache: (key -> (time, mem)) valid only for the generation that
         # computed it — invalidated wholesale on every swap, while the

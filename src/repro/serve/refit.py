@@ -35,6 +35,7 @@ import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.features import ProfileRecord
+from repro.obs import events
 from repro.serve.feedback_store import FeedbackStore, StoreKey
 
 
@@ -313,6 +314,7 @@ class OnlineRefitter:
                     records, val_frac=self.val_frac)
             except Exception:
                 self.refit_failures += 1
+                events.emit("refit_failed", generation=self.generation.number)
                 raise
             self.last_refit_s = time.perf_counter() - t0
             gen = ModelGeneration(
@@ -325,6 +327,10 @@ class OnlineRefitter:
             with self._cond:
                 self._consumed = consumed
                 self._fresh_since = None
+        events.emit("refit", generation=gen.number,
+                    n_feedback=gen.n_feedback,
+                    n_train_records=gen.n_train_records,
+                    duration_s=self.last_refit_s)
         self._publish(gen)
         return gen
 

@@ -68,6 +68,7 @@ import numpy as np
 
 from repro.core.features import ProfileRecord
 from repro.core.predictor import DNNAbacus
+from repro.obs import events
 from repro.serve.cluster import (GatewayReplica, ReplicaNotRunning,
                                  ReplicaUnavailable)
 from repro.serve.feedback_store import FeedbackStore
@@ -309,9 +310,12 @@ class ReplicaServer:
         replica, svc = self.replica, self.replica.service
         try:
             if op == "submit":
+                # "tc" carries the frontend's trace context across the
+                # process boundary; the gateway's tick stamps spans and
+                # ships them back inside the estimate ("_trace").
                 fut = replica.submit(decode_config(msg["cfg"]),
                                      msg["batch"], msg["seq"],
-                                     fp=msg.get("fp"))
+                                     fp=msg.get("fp"), tc=msg.get("tc"))
 
                 def relay(f: Future, mid=mid) -> None:
                     # worker thread -> event loop: schedule the reply
@@ -363,6 +367,9 @@ class ReplicaServer:
                 result = await loop.run_in_executor(None, replica.stats)
             elif op == "counters":
                 result = replica.stats.as_dict()
+            elif op == "metrics":
+                result = await loop.run_in_executor(
+                    None, replica.metrics_snapshot)
             elif op == "server_info":
                 result = await loop.run_in_executor(None,
                                                     replica.server_info)
@@ -446,7 +453,7 @@ class _RemoteStats:
     re-normalized after their JSON round trip.
     """
 
-    _COUNTERS = tuple(f.name for f in dataclasses.fields(ServerStats))
+    _COUNTERS = tuple(ServerStats.COUNTERS)
 
     def __init__(self, replica: "RemoteReplica"):
         self._replica = replica
@@ -553,6 +560,7 @@ class RemoteReplica:
             self, TraceStore(trace_root) if trace_root else None)
         self.stats = _RemoteStats(self)
         self._counters_cache: Dict[str, int] = {}
+        self._cache_at: Optional[float] = None  # monotonic age of the cache
         self._closing = False
         self._dead_fired = False
         self._wlock = threading.Lock()
@@ -679,6 +687,8 @@ class RemoteReplica:
         except OSError:
             pass
         cb = self.on_dead
+        if fire:
+            events.emit("replica_dead", replica=self.name, reason=reason)
         if fire and cb is not None:
             try:
                 cb(self)
@@ -687,11 +697,12 @@ class RemoteReplica:
 
     # -- replica interface ---------------------------------------------------
     def submit(self, cfg, batch: int, seq: int,
-               fp: Optional[str] = None) -> Future:
-        return self._request(
-            "submit", {"cfg": encode_config(cfg), "batch": int(batch),
-                       "seq": int(seq), "fp": fp},
-            self.submit_timeout)
+               fp: Optional[str] = None, tc=None) -> Future:
+        params = {"cfg": encode_config(cfg), "batch": int(batch),
+                  "seq": int(seq), "fp": fp}
+        if tc is not None:  # trace context crosses inside the frame header
+            params["tc"] = tc
+        return self._request("submit", params, self.submit_timeout)
 
     def submit_many(self, queries: Sequence) -> List[Future]:
         """Pipelined per-query frames: the server's gateway coalesces
@@ -699,7 +710,7 @@ class RemoteReplica:
         futs = []
         for q in queries:
             q = q if isinstance(q, Query) else Query(*q)
-            futs.append(self.submit(q.cfg, q.batch, q.seq, fp=q.fp))
+            futs.append(self.submit(q.cfg, q.batch, q.seq, fp=q.fp, tc=q.tc))
         return futs
 
     def predict_one(self, cfg, batch: int, seq: int,
@@ -738,28 +749,42 @@ class RemoteReplica:
         except ReplicaUnavailable:
             return dict(self._counters_cache)
         self._counters_cache = dict(c)
+        self._cache_at = time.monotonic()
         return c
 
     def _full_stats(self) -> Dict:
         try:
             d = self._call("stats")
         except ReplicaUnavailable:
-            return {"replica": self.name, "dead": True,
+            # cached fallback, explicitly marked: a dead member's last
+            # words must be distinguishable from live data, and
+            # as_of_monotonic says how old they are.
+            return {"replica": self.name, "dead": True, "stale": True,
+                    "as_of_monotonic": self._cache_at,
                     **dict(self._counters_cache)}
         d["calibration"] = _normalize_calibration(d.get("calibration"))
         self._counters_cache = {k: d[k] for k in _RemoteStats._COUNTERS
                                 if k in d}
+        self._cache_at = time.monotonic()
         return d
 
     def server_info(self) -> Dict:
         try:
             info = self._call("server_info")
         except ReplicaUnavailable:
-            return {"replica": self.name, "dead": True, "running": False,
+            return {"replica": self.name, "dead": True, "stale": True,
+                    "as_of_monotonic": self._cache_at, "running": False,
                     "queued": 0, **dict(self._counters_cache)}
         self._counters_cache = {k: info[k] for k in _RemoteStats._COUNTERS
                                 if k in info}
+        self._cache_at = time.monotonic()
         return info
+
+    def metrics_snapshot(self) -> Dict:
+        """The remote gateway's registry snapshot (``metrics`` op).
+        Raises ``ReplicaUnavailable`` when the replica is dead — the
+        fleet merge skips it and counts it unreachable."""
+        return self._call("metrics")
 
     # -- lifecycle -----------------------------------------------------------
     @property
@@ -845,6 +870,7 @@ def spawn_replica(name: str, predictor_path: str, *,
                   tracer: Optional[str] = None, host: str = "127.0.0.1",
                   startup_timeout: float = 60.0,
                   python: Optional[str] = None,
+                  event_log: Optional[str] = None,
                   **remote_kw) -> RemoteReplica:
     """Spawn ``python -m repro.serve.rpc`` and connect a stub to it.
 
@@ -863,6 +889,8 @@ def spawn_replica(name: str, predictor_path: str, *,
         cmd += ["--feedback-store", str(feedback_root)]
     if tracer:
         cmd += ["--tracer", tracer]
+    if event_log:
+        cmd += ["--event-log", str(event_log)]
     env = dict(os.environ)
     env["PYTHONPATH"] = _src_dir() + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
@@ -902,6 +930,7 @@ def spawn_replica(name: str, predictor_path: str, *,
 
 def spawn_fleet(n_or_names, predictor_path: str, root: str, *,
                 tracer: Optional[str] = None,
+                event_log: Optional[str] = None,
                 **kw) -> List[RemoteReplica]:
     """Spawn a homogeneous fleet with per-replica store slices under
     ``root`` — the layout ``ClusterFrontend(abacus, n, trace_root=...,
@@ -917,7 +946,7 @@ def spawn_fleet(n_or_names, predictor_path: str, root: str, *,
                 name, predictor_path,
                 trace_root=os.path.join(root, "traces", name),
                 feedback_root=os.path.join(root, "feedback", name),
-                tracer=tracer, **kw))
+                tracer=tracer, event_log=event_log, **kw))
     except BaseException:
         shutdown_fleet(replicas)
         raise
@@ -952,8 +981,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="module:attr of the tracer callable")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--trace-workers", type=int, default=4)
+    ap.add_argument("--event-log", default=None,
+                    help="JSONL file for this replica's lifecycle events "
+                         "(gen swaps etc.); safe to share across a fleet "
+                         "(line-append writes)")
     args = ap.parse_args(argv)
 
+    if args.event_log:
+        events.configure(path=args.event_log)
     replica = GatewayReplica(
         args.name, DNNAbacus.load(args.predictor),
         store=TraceStore(args.trace_store) if args.trace_store else None,
@@ -964,14 +999,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     replica.start()
     server = ReplicaServer(replica, host=args.host, port=args.port)
 
+    # the ready handshake is itself a structured event; it ALSO goes to
+    # stdout (same wire shape as before: {"event": "ready", "port": ...})
+    # because spawn_replica blocks on that line. Only this one event may
+    # use stdout — the parent stops draining the pipe afterwards.
+    handshake = events.EventLog(stream=sys.stdout)
+
     def ready(port: int) -> None:
-        print(json.dumps({"event": "ready", "name": args.name,
-                          "port": port, "pid": os.getpid()}), flush=True)
+        events.emit("replica_started", replica=args.name, port=port)
+        handshake.emit("ready", name=args.name, port=port)
 
     try:
         server.run_forever(ready_cb=ready)
     finally:
         replica.stop(timeout=10.0)
+        events.emit("replica_stopped", replica=args.name)
     return 0
 
 

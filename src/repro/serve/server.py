@@ -24,30 +24,67 @@ trace concurrently instead of serially inside ``predict_many``.
 
 from __future__ import annotations
 
-import dataclasses
 import threading
+import time
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import events
+from repro.obs.metrics import MetricsRegistry, merge_snapshots
+from repro.obs.tracing import SpanSink, make_span
 from repro.serve.feedback_store import CalibrationWindow
 from repro.serve.prediction_service import PredictionService, Query
 
 
-@dataclasses.dataclass
 class ServerStats:
-    submitted: int = 0
-    completed: int = 0
-    failed: int = 0
-    ticks: int = 0             # micro-batches served
-    ensemble_passes: int = 0   # abacus.predict calls (== ticks served)
-    max_batch: int = 0         # largest micro-batch coalesced
-    cold_traces: int = 0       # unique keys traced on the pool
-    gen_swaps: int = 0         # generations hot-swapped between ticks
-    observations: int = 0      # measured completions reported via observe()
+    """Gateway counters, refactored onto a ``MetricsRegistry``.
+
+    Attribute access is byte-compatible with the dataclass this used to
+    be: ``stats.ticks += 1`` mutates the registry counter named
+    ``server_ticks_total``, ``as_dict()`` returns the same keys in the
+    same order, and zero-arg / keyword construction still work (tests
+    and stubs build bare ``ServerStats()`` instances). Counters stay
+    unlocked — callers synchronize under ``AbacusServer._cond`` exactly
+    as before; the registry only gives them names and an exposition
+    path.
+    """
+
+    COUNTERS = ("submitted", "completed", "failed", "ticks",
+                "ensemble_passes", "max_batch", "cold_traces",
+                "gen_swaps", "observations")
+    # high-water marks merge by max, not sum
+    _GAUGES = frozenset({"max_batch"})
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None, **initial):
+        object.__setattr__(self, "_metrics", {})
+        registry = registry if registry is not None else MetricsRegistry()
+        object.__setattr__(self, "registry", registry)
+        metrics = self.__dict__["_metrics"]
+        for name in self.COUNTERS:
+            if name in self._GAUGES:
+                metrics[name] = registry.gauge(f"server_{name}")
+            else:
+                metrics[name] = registry.counter(f"server_{name}_total")
+        for k, v in initial.items():
+            setattr(self, k, v)
+
+    def __getattr__(self, name):
+        metrics = self.__dict__.get("_metrics")
+        if metrics is not None and name in metrics:
+            return metrics[name].value
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value):
+        metrics = self.__dict__.get("_metrics")
+        if metrics is not None and name in metrics:
+            metrics[name].set(value)
+        else:
+            object.__setattr__(self, name, value)
 
     def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+        metrics = self.__dict__["_metrics"]
+        return {name: metrics[name].value for name in self.COUNTERS}
 
     @property
     def mean_batch(self) -> float:
@@ -84,7 +121,8 @@ class AbacusServer:
 
     def __init__(self, service: PredictionService, max_batch: int = 256,
                  trace_workers: int = 4, feedback=None, refitter=None,
-                 calibration_window: int = 256):
+                 calibration_window: int = 256,
+                 metrics: Optional[MetricsRegistry] = None):
         self.service = service
         self.max_batch = int(max_batch)
         self.trace_workers = int(trace_workers)
@@ -92,8 +130,34 @@ class AbacusServer:
         # replica stamps {"replica": name} so fleet-level tests and
         # clients can attribute (tick, generation) pairs per replica.
         self.est_tags: Dict[str, object] = {}
-        self.stats = ServerStats()
+        # one registry per gateway: shared with the service (so server_*
+        # and service_* counters land in one snapshot) unless the caller
+        # supplies its own. `metrics.enabled=False` keeps counters live
+        # (tick numbering is load-bearing) but skips histogram observes
+        # and timing stamps — the baseline the <3% overhead gate uses.
+        self.metrics = (metrics if metrics is not None
+                        else getattr(service, "metrics", None)
+                        or MetricsRegistry())
+        self.stats = ServerStats(self.metrics)
         self.stats._full_stats = self._stats_dict  # server.stats() works too
+        self.span_sink = SpanSink()
+        self._h_latency = self.metrics.histogram(
+            "server_query_latency_seconds",
+            help="submit-to-resolution latency per query")
+        self._h_queue_wait = self.metrics.histogram(
+            "server_queue_wait_seconds",
+            help="time between enqueue and the serving tick starting")
+        self._h_tick = self.metrics.histogram(
+            "server_tick_seconds", help="wall time per micro-batch tick")
+        self._h_cold = self.metrics.histogram(
+            "server_cold_trace_phase_seconds",
+            help="record-resolution phase duration when cold traces ran")
+        self._h_ensemble = self.metrics.histogram(
+            "server_ensemble_phase_seconds",
+            help="ensemble-pass phase duration when the pass ran")
+        self.metrics.register_callback(
+            lambda: {"server_queued": len(self._queue),
+                     "server_running": int(self._running)})
         # feedback loop (optional): measured completions land in the
         # FeedbackStore, calibration tracks predicted-vs-observed, and
         # the refitter publishes new generations back through us.
@@ -185,14 +249,20 @@ class AbacusServer:
 
     # -- client API ---------------------------------------------------------
     def submit(self, cfg, batch: int, seq: int,
-               fp: Optional[str] = None) -> Future:
+               fp: Optional[str] = None, tc=None) -> Future:
         """Enqueue one admission query; resolves to the estimate dict.
 
         ``fp`` optionally carries the config fingerprint a router
         already computed, sparing this server's worker the re-hash.
+        ``tc`` optionally carries a trace context (see
+        :mod:`repro.obs.tracing`): the serving tick then records spans
+        for this query and ships them back inside the estimate under
+        ``"_trace"``.
         """
         fut: Future = Future()
-        q = Query(cfg, int(batch), int(seq), fp=fp)
+        if self.metrics.enabled:
+            fut._obs_t0 = time.perf_counter()
+        q = Query(cfg, int(batch), int(seq), fp=fp, tc=tc)
         with self._cond:
             if not self._running:
                 raise RuntimeError("AbacusServer is not running "
@@ -205,6 +275,10 @@ class AbacusServer:
     def submit_many(self, queries: Sequence) -> List[Future]:
         qs = [q if isinstance(q, Query) else Query(*q) for q in queries]
         futs: List[Future] = [Future() for _ in qs]
+        if self.metrics.enabled:
+            t0 = time.perf_counter()  # one clock read for the whole wave
+            for fut in futs:
+                fut._obs_t0 = t0
         with self._cond:
             if not self._running:
                 raise RuntimeError("AbacusServer is not running "
@@ -253,6 +327,7 @@ class AbacusServer:
             # accounting disagrees with the generations actually serving.
             with self._cond:
                 self.stats.gen_swaps += 1
+            events.emit("gen_swap", generation=gen.number, **self.est_tags)
         return adopted
 
     def _apply_pending_locked(self) -> None:
@@ -260,6 +335,7 @@ class AbacusServer:
         gen, self._pending_gen = self._pending_gen, None
         if gen is not None and self.service.adopt(gen.abacus, gen.number):
             self.stats.gen_swaps += 1
+            events.emit("gen_swap", generation=gen.number, **self.est_tags)
 
     # -- feedback loop ------------------------------------------------------
     def observe(self, cfg, batch: int, seq: int, time_s: float,
@@ -334,6 +410,8 @@ class AbacusServer:
         # not the only writer (observe() and remote stats readers run on
         # client threads), and unlocked read-modify-writes drop counts.
         svc = self.service
+        obs_on = self.metrics.enabled
+        t_start = time.perf_counter()
         with self._cond:
             self.stats.ticks += 1
             tick = self.stats.ticks
@@ -366,11 +444,14 @@ class AbacusServer:
                 rec_of[key] = f.result()
             except Exception as e:  # bad config: fail that query, not the tick
                 err_of[key] = e
+        traces_ran = svc.stats.traces - traces_before
         with self._cond:
-            self.stats.cold_traces += svc.stats.traces - traces_before
+            self.stats.cold_traces += traces_ran
+        t_records = time.perf_counter()
         # 2) ONE ensemble pass over the unique resolvable records.
         uniq = [k for k in by_key if k in rec_of]
         preds = {}
+        ran_ensemble = False
         if uniq:
             try:
                 # at most ONE ensemble pass per tick — and zero when the
@@ -383,6 +464,7 @@ class AbacusServer:
                     self.stats.ensemble_passes += int(ran_ensemble)
             except Exception as e:
                 err_of.update({k: e for k in uniq})
+        t_ensemble = time.perf_counter()
         # 3) resolve futures with per-query admission verdicts.
         for (q, fut), key in zip(batch, key_of):
             if key in preds:
@@ -392,14 +474,90 @@ class AbacusServer:
                 est = svc._estimate(rec_of[key], t, m, generation=generation)
                 est["tick"] = tick
                 est.update(self.est_tags)
+                if q.tc is not None:
+                    est["_trace"] = self._spans_for(
+                        q, fut, tick, generation, len(batch), t_start,
+                        t_records, t_ensemble, traces_ran, ran_ensemble)
                 fut.set_result(est)
             else:
                 with self._cond:
                     self.stats.failed += 1
                 fut.set_exception(err_of.get(
                     key, RuntimeError("prediction failed")))
+        if obs_on:
+            t_end = time.perf_counter()
+            t0s = [t0 for _, fut in batch
+                   if (t0 := getattr(fut, "_obs_t0", None)) is not None]
+            self._h_queue_wait.observe_many([t_start - t0 for t0 in t0s])
+            self._h_latency.observe_many([t_end - t0 for t0 in t0s])
+            self._h_tick.observe(t_end - t_start)
+            if traces_ran:
+                self._h_cold.observe(t_records - t_start)
+            if ran_ensemble:
+                self._h_ensemble.observe(t_ensemble - t_records)
+
+    def _spans_for(self, q: Query, fut: Future, tick: int, generation,
+                   batch_len: int, t_start: float, t_records: float,
+                   t_ensemble: float, traces_ran: int,
+                   ran_ensemble: bool) -> List[Dict]:
+        """Lifecycle spans for one traced query's pass through the tick.
+
+        Off the warm path by construction: only queries carrying a trace
+        context reach here. Spans are recorded locally and returned so
+        the caller can ship them back inside the estimate dict."""
+        tid = q.tc.get("trace")
+        parent = q.tc.get("span")
+        now_perf = time.perf_counter()
+        now_wall = time.time()
+
+        def wall(tp: float) -> float:
+            return now_wall - (now_perf - tp)
+
+        replica = self.est_tags.get("replica")
+        spans = []
+        t0 = getattr(fut, "_obs_t0", None)
+        if t0 is not None:
+            spans.append(make_span(tid, "queue_wait", t_start - t0,
+                                   parent=parent, ts=wall(t0),
+                                   replica=replica))
+        spans.append(make_span(tid, "tick_batch", now_perf - t_start,
+                               parent=parent, ts=wall(t_start), tick=tick,
+                               batch=batch_len, generation=generation,
+                               replica=replica))
+        tick_span = spans[-1]["span"]
+        if traces_ran:
+            spans.append(make_span(tid, "cold_trace", t_records - t_start,
+                                   parent=tick_span, ts=wall(t_start),
+                                   traces=traces_ran, replica=replica))
+        if ran_ensemble:
+            spans.append(make_span(tid, "ensemble", t_ensemble - t_records,
+                                   parent=tick_span, ts=wall(t_records),
+                                   replica=replica))
+        spans.append(make_span(tid, "reply", now_perf - t_ensemble,
+                               parent=tick_span, ts=wall(t_ensemble),
+                               replica=replica))
+        self.span_sink.extend(spans)
+        return spans
 
     # -- introspection ------------------------------------------------------
+    def metrics_snapshot(self) -> Dict:
+        """JSON-safe snapshot of this gateway's registry (server_* and,
+        when the service shares the registry, service_* metrics)."""
+        svc_reg = getattr(self.service, "metrics", None)
+        if svc_reg is None or svc_reg is self.metrics:
+            return self.metrics.snapshot()
+        return merge_snapshots([self.metrics.snapshot(), svc_reg.snapshot()])
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of :meth:`metrics_snapshot`."""
+        from repro.obs.metrics import render_prometheus
+        return render_prometheus(self.metrics_snapshot(),
+                                 namespace=self.metrics.namespace)
+
+    def trace_spans(self, trace_id: str) -> List[Dict]:
+        """Spans recorded locally for one trace id."""
+        return self.span_sink.for_trace(trace_id)
+
     def server_info(self) -> Dict:
         with self._cond:
             queued = len(self._queue)

@@ -1,0 +1,388 @@
+"""Telemetry plane: metrics registry, merge properties, tracing, events.
+
+Tier-1 coverage for ``repro.obs``: histogram bucket/percentile
+exactness, order-independent snapshot merging (property), count-weighted
+calibration merge == single-window ground truth (property), Prometheus
+rendering, registry-backed ``ServerStats``/``ServiceStats`` byte-compat,
+server end-to-end histogram counts, an in-process frontend trace, and
+the JSONL event log round trip.
+"""
+
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import events
+from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, CounterDict, Gauge,
+                               Histogram, MetricsRegistry, merge_snapshots,
+                               quantile_from_buckets, render_prometheus)
+from repro.obs.tracing import SpanSink, make_span, new_context, new_id
+from repro.serve import (AbacusServer, ClusterFrontend, PredictionService,
+                         config_fingerprint)
+from repro.serve.cluster import merge_calibration
+from repro.serve.feedback_store import CalibrationWindow
+from repro.serve.prediction_service import ServiceStats
+from repro.serve.server import ServerStats
+
+from _hypo import given, settings, st
+from test_prediction_service import _abacus, _counting_tracer, _fake_cfg
+
+
+# -- histogram exactness -----------------------------------------------------
+
+
+def test_histogram_buckets_are_upper_inclusive():
+    h = Histogram("h", buckets=(1.0, 2.0, 4.0))
+    h.observe_many([0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 9.0])
+    snap = h.snapshot()
+    # v <= le[i]: 1.0 lands in the first bucket, 2.0 in the second,
+    # 4.0 in the third, 9.0 overflows
+    assert snap["counts"] == [2, 2, 2, 1]
+    assert snap["count"] == 7
+    assert snap["sum"] == pytest.approx(21.0)
+    assert snap["min"] == 0.5 and snap["max"] == 9.0
+
+
+def test_histogram_percentiles_are_exact_nearest_rank():
+    h = Histogram("h")
+    h.observe_many(float(i) for i in range(1, 101))  # 1..100
+    assert h.percentile(0.50) == 50.0
+    assert h.percentile(0.95) == 95.0
+    assert h.percentile(0.99) == 99.0
+    snap = h.snapshot()
+    assert (snap["p50"], snap["p95"], snap["p99"]) == (50.0, 95.0, 99.0)
+
+
+def test_histogram_deferred_fold_is_invisible_to_readers():
+    """Observations buffer until a reader flushes; every read API sees
+    the folded totals regardless of FLUSH_AT."""
+    h = Histogram("h", buckets=(1.0,))
+    h.observe(0.5)
+    # pending, not yet folded
+    assert h._pending_n == 1 and h.count == 0
+    assert h.snapshot()["count"] == 1  # snapshot() flushed
+    assert h._pending_n == 0 and h.count == 1
+    h.observe_many([0.25] * (h.FLUSH_AT + 1))  # crosses the cap: auto-fold
+    assert h._pending_n == 0
+    assert h.count == h.FLUSH_AT + 2
+
+
+def test_histogram_rejects_unsorted_bounds():
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=(1.0, 1.0))
+
+
+def test_histogram_observe_many_is_thread_safe():
+    h = Histogram("h")
+    n, workers = 500, 8
+
+    def feed():
+        for i in range(n):
+            h.observe_many([1e-4, 1e-2])
+
+    threads = [threading.Thread(target=feed) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.snapshot()["count"] == 2 * n * workers
+
+
+# -- merge properties --------------------------------------------------------
+
+
+def _snap_from(values, name="lat"):
+    reg = MetricsRegistry()
+    reg.counter("reqs_total").inc(len(values))
+    reg.gauge("depth").set(max(values) if values else 0)
+    if values:
+        reg.histogram(name).observe_many(float(v) for v in values)
+    return reg.snapshot()
+
+
+@settings(max_examples=20)
+@given(st.integers(min_value=0, max_value=40),
+       st.integers(min_value=0, max_value=40),
+       st.integers(min_value=0, max_value=40))
+def test_merge_snapshots_is_order_independent(na, nb, nc):
+    """Counters sum, gauges max, buckets add — any replica arrival
+    order produces the identical fleet snapshot."""
+    parts = [_snap_from(list(range(1, n + 1))) for n in (na, nb, nc)]
+    forward = merge_snapshots(parts)
+    backward = merge_snapshots(parts[::-1])
+    rotated = merge_snapshots(parts[1:] + parts[:1])
+    assert forward == backward == rotated
+    assert forward["reqs_total"]["value"] == na + nb + nc
+    assert forward["depth"]["value"] == max(na, nb, nc)
+    if na + nb + nc:
+        assert forward["lat"]["count"] == na + nb + nc
+
+
+@settings(max_examples=20)
+@given(st.integers(min_value=1, max_value=60),
+       st.integers(min_value=1, max_value=60),
+       st.integers(min_value=1, max_value=4))
+def test_merge_calibration_equals_single_window(n1, n2, gens):
+    """Count-weighted merge of disjoint per-replica windows must equal
+    one CalibrationWindow fed every completion."""
+    rng = np.random.default_rng(n1 * 1000 + n2 * 10 + gens)
+    rows = [(float(rng.uniform(0.5, 2.0)), float(rng.uniform(0.5, 2.0)),
+             float(rng.uniform(1e6, 1e9)), float(rng.uniform(1e6, 1e9)),
+             int(rng.integers(0, gens)))
+            for _ in range(n1 + n2)]
+    whole = CalibrationWindow(window=4096)
+    part_a, part_b = (CalibrationWindow(window=4096) for _ in range(2))
+    for i, row in enumerate(rows):
+        whole.observe(*row)
+        (part_a if i < n1 else part_b).observe(*row)
+    merged = merge_calibration([part_a.metrics(), part_b.metrics()])
+    truth = whole.metrics()
+    for field in ("count", "time_mre", "mem_mre", "time_drift", "mem_drift"):
+        assert merged[field] == pytest.approx(truth[field], rel=1e-9)
+    assert set(merged["by_generation"]) == set(truth["by_generation"])
+    for gen, grp in truth["by_generation"].items():
+        for field in ("count", "time_mre", "mem_mre"):
+            assert merged["by_generation"][gen][field] == pytest.approx(
+                grp[field], rel=1e-9)
+
+
+def test_quantile_from_buckets_interpolates_inside_target_bucket():
+    le = (1.0, 2.0, 4.0)
+    counts = [10, 0, 10, 0]  # 10 in (0,1], 10 in (2,4]
+    assert quantile_from_buckets(le, counts, 0.25) == pytest.approx(0.5)
+    assert quantile_from_buckets(le, counts, 0.75) == pytest.approx(3.0)
+    assert quantile_from_buckets(le, [0, 0, 0, 0], 0.5) is None
+    # overflow bucket clamps to hi when given
+    assert quantile_from_buckets(le, [0, 0, 0, 4], 0.99, hi=7.0) <= 7.0
+
+
+# -- registry + rendering ----------------------------------------------------
+
+
+def test_registry_is_idempotent_by_name_and_type_checked():
+    reg = MetricsRegistry()
+    assert reg.counter("a_total") is reg.counter("a_total")
+    assert reg.histogram("h") is reg.histogram("h")
+    with pytest.raises(TypeError):
+        reg.gauge("a_total")
+
+
+def test_registry_snapshot_includes_callback_gauges():
+    reg = MetricsRegistry()
+    reg.counter("c_total").inc(3)
+    reg.register_callback(lambda: {"queue_depth": 7})
+    reg.register_callback(lambda: (_ for _ in ()).throw(RuntimeError()))
+    snap = reg.snapshot()
+    assert snap["c_total"] == {"type": "counter", "value": 3}
+    assert snap["queue_depth"] == {"type": "gauge", "value": 7}
+
+
+def test_disabled_registry_keeps_counters_live():
+    """enabled=False is the baseline arm of the overhead gate: counters
+    and gauges still work (server logic depends on them); only
+    histogram observes are expected to be skipped by callers."""
+    reg = MetricsRegistry(enabled=False)
+    reg.counter("c_total").inc()
+    assert reg.counter("c_total").value == 1
+    assert reg.enabled is False
+
+
+def test_render_prometheus_emits_cumulative_buckets():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total").inc(5)
+    h = reg.histogram("lat", buckets=(1.0, 2.0))
+    h.observe_many([0.5, 1.5, 9.0])
+    text = render_prometheus(reg.snapshot())
+    assert "# TYPE abacus_reqs_total counter" in text
+    assert "abacus_reqs_total 5" in text
+    assert 'abacus_lat_bucket{le="1.0"} 1' in text
+    assert 'abacus_lat_bucket{le="2.0"} 2' in text
+    assert 'abacus_lat_bucket{le="+Inf"} 3' in text
+    assert "abacus_lat_count 3" in text
+    assert text.endswith("\n")
+
+
+def test_counterdict_keeps_dict_surface():
+    reg = MetricsRegistry()
+    d = CounterDict(reg, "reshard_", ("hedges", "retries"))
+    d["hedges"] += 2
+    assert d["hedges"] == 2 and d["retries"] == 0
+    assert dict(d.items()) == {"hedges": 2, "retries": 0}
+    assert set(d.keys()) == {"hedges", "retries"}
+    assert "hedges" in d and len(d) == 2
+    assert d.get("nope", -1) == -1
+    # the same ints are visible through the registry under metric names
+    assert reg.counter("reshard_hedges_total").value == 2
+
+
+# -- stats byte-compat -------------------------------------------------------
+
+
+def test_server_stats_is_byte_compatible_with_dataclass():
+    s = ServerStats()
+    s.ticks += 3
+    s.completed += 6
+    s.max_batch = 4
+    assert list(s.as_dict()) == list(ServerStats.COUNTERS)
+    assert s.as_dict()["ticks"] == 3
+    assert s.mean_batch == pytest.approx(2.0)
+    kw = ServerStats(ticks=2, submitted=5)  # keyword construction
+    assert kw.ticks == 2 and kw.submitted == 5
+    # registry shares the same underlying int
+    assert s.registry.counter("server_ticks_total").value == 3
+    assert s.registry.gauge("server_max_batch").value == 4
+
+
+def test_service_stats_is_byte_compatible_with_dataclass():
+    s = ServiceStats()
+    s.hits += 2
+    s.misses += 1
+    d = s.as_dict()
+    assert d["hits"] == 2 and d["misses"] == 1
+    assert d["queries"] == 3  # derived key preserved
+    assert ServiceStats(hits=7).hits == 7
+    assert s.registry.counter("service_hits_total").value == 2
+
+
+# -- server / frontend end-to-end --------------------------------------------
+
+
+def _server(**kw):
+    svc = PredictionService(_abacus(), tracer=_counting_tracer([]))
+    return AbacusServer(svc, **kw).start()
+
+
+def test_server_histograms_count_every_query():
+    srv = _server()
+    try:
+        keys = [(_fake_cfg(n), 2, 32) for n in "abcd"]
+        srv.predict_many(keys, 30)
+        snap = srv.metrics_snapshot()
+        lat = snap["server_query_latency_seconds"]
+        assert lat["count"] == 4
+        assert snap["server_queue_wait_seconds"]["count"] == 4
+        assert snap["server_tick_seconds"]["count"] >= 1
+        assert lat["p50"] is not None and lat["p99"] >= lat["p50"]
+        # legacy counters and metric series agree
+        assert snap["server_completed_total"]["value"] == srv.stats.completed
+        assert "abacus_server_query_latency_seconds_count" \
+            in srv.metrics_text()
+    finally:
+        srv.stop()
+
+
+def test_frontend_trace_covers_submit_route_tick_reply():
+    fe = ClusterFrontend(_abacus(), n_replicas=2,
+                         tracer=_counting_tracer([])).start()
+    try:
+        fut = fe.submit(_fake_cfg("t"), 2, 32, trace=True)
+        est = fut.result(30)
+        assert np.isfinite(est["time_s"])
+        assert "_trace" not in est  # shipped spans are stripped client-side
+        spans = fe.trace_spans(fut.trace_id)
+        names = {s["name"] for s in spans}
+        assert {"submit", "route", "queue_wait", "tick_batch",
+                "reply"} <= names
+        assert {s["trace"] for s in spans} == {fut.trace_id}
+        # every span's parent resolves inside the trace (root or a
+        # sibling like tick_batch for its phase children)
+        ids = {s["span"] for s in spans}
+        assert all(s["parent"] in ids
+                   for s in spans if s["name"] != "submit")
+        json.dumps(spans)  # spans are JSON-safe by construction
+    finally:
+        fe.stop()
+
+
+def test_untraced_queries_record_no_spans():
+    fe = ClusterFrontend(_abacus(), n_replicas=2,
+                         tracer=_counting_tracer([])).start()
+    try:
+        fe.predict_one(_fake_cfg("u"), 2, 32)
+        assert len(fe.span_sink) == 0
+    finally:
+        fe.stop()
+
+
+def test_frontend_metrics_snapshot_merges_replicas():
+    fe = ClusterFrontend(_abacus(), n_replicas=2,
+                         tracer=_counting_tracer([])).start()
+    try:
+        fe.predict_many([(_fake_cfg(n), 2, 32) for n in "abcdef"], 30)
+        snap = fe.metrics_snapshot()
+        assert snap["server_completed_total"]["value"] == 6
+        assert snap["fleet_replicas"]["value"] == 2
+        legacy = fe.stats()
+        assert legacy["fleet"]["completed"] == 6  # stats() keys unchanged
+        assert "abacus_server_completed_total 6" in fe.metrics_text()
+    finally:
+        fe.stop()
+
+
+# -- spans & sink ------------------------------------------------------------
+
+
+def test_span_sink_filters_and_orders_by_trace():
+    sink = SpanSink()
+    tc = new_context()
+    sink.record(make_span(tc["trace"], "b", 0.1, ts=2.0, parent=tc["span"]))
+    sink.record(make_span(tc["trace"], "a", 0.1, ts=1.0, parent=tc["span"]))
+    sink.record(make_span(new_id(), "other", 0.1))
+    got = sink.for_trace(tc["trace"])
+    assert [s["name"] for s in got] == ["a", "b"]
+    assert len(sink) == 3
+    sink.clear()
+    assert len(sink) == 0
+
+
+def test_make_span_shape():
+    s = make_span("t1", "tick_batch", 0.25, parent="p1", replica="r0")
+    assert s["trace"] == "t1" and s["parent"] == "p1"
+    assert s["dur_s"] == 0.25 and s["attrs"] == {"replica": "r0"}
+    assert isinstance(s["pid"], int) and len(s["span"]) == 16
+
+
+# -- event log ---------------------------------------------------------------
+
+
+def test_event_log_file_round_trip(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    log = events.EventLog(path=path)
+    log.emit("gen_swap", generation=3)
+    log.emit("exclusion", replica="r1")
+    log.close()
+    lines = [json.loads(l) for l in open(path)]
+    assert [r["event"] for r in lines] == ["gen_swap", "exclusion"]
+    assert lines[0]["generation"] == 3 and "ts" in lines[0]
+    assert lines[1]["replica"] == "r1" and "pid" in lines[1]
+    # ring buffer mirrors the file
+    assert [r["event"] for r in log.tail()] == ["gen_swap", "exclusion"]
+
+
+def test_event_log_append_interleaves_processes(tmp_path):
+    """Two EventLog handles on one path append whole lines."""
+    path = str(tmp_path / "shared.jsonl")
+    a, b = events.EventLog(path=path), events.EventLog(path=path)
+    for i in range(20):
+        (a if i % 2 else b).emit("tick", i=i)
+    a.close(), b.close()
+    recs = [json.loads(l) for l in open(path)]
+    assert sorted(r["i"] for r in recs) == list(range(20))
+
+
+def test_gen_swap_emits_event():
+    from repro.serve import ModelGeneration
+    events.clear()
+    srv = _server()
+    try:
+        srv.publish_generation(ModelGeneration(number=2, abacus=_abacus()))
+        srv.predict_one(_fake_cfg("g"), 2, 32)  # swap adopted on a tick
+        swaps = [e for e in events.tail() if e["event"] == "gen_swap"]
+        assert swaps and swaps[-1]["generation"] == 2
+    finally:
+        srv.stop()

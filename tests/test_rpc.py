@@ -184,7 +184,7 @@ def test_remote_stats_attribute_and_callable_views(pair_fleet):
     assert rem.stats.ticks >= 1 and rem.stats.completed >= 1
     assert rem.stats.mean_batch > 0
     d = rem.stats.as_dict()
-    assert set(f.name for f in dataclasses.fields(ServerStats)) <= set(d)
+    assert set(ServerStats.COUNTERS) <= set(d)
     # callable view: full stats dict, calibration keys un-stringified
     full = rem.stats()
     assert full["ticks"] == d["ticks"] or full["ticks"] >= d["ticks"]
@@ -376,5 +376,61 @@ def test_hedge_duplicates_slow_query_to_next_ring_owner():
         assert est["replica"] == "g1" and np.isfinite(est["time_s"])
         assert stalled.submissions == 1  # primary did get the query first
         assert fe.reshard_stats["hedges"] >= 1
+        assert fe.reshard_stats["hedge_failures"] == 0
     finally:
         gw.stop()
+
+
+def test_failed_hedge_counts_as_hedge_failure_not_hedge():
+    """Regression: ``hedges`` used to move before the duplicate submit
+    was attempted, so a hedge that never reached another replica still
+    counted as issued. A fleet of one stalled member makes every hedge
+    attempt fail (nothing to duplicate to): the failure must land in
+    ``hedge_failures`` and leave ``hedges`` untouched."""
+    stalled = _StalledReplica("s0")
+    fe = ClusterFrontend(replicas=[stalled], hedge_after_s=0.05,
+                         auto_exclude=False)
+    fe.start()
+    fut = fe.submit(_fake_cfg("hf"), 2, 32)
+    deadline = time.monotonic() + 10
+    while fe.reshard_stats["hedge_failures"] < 1:
+        assert time.monotonic() < deadline, "hedge timer never fired"
+        time.sleep(0.02)
+    assert fe.reshard_stats["hedges"] == 0
+    assert not fut.done()  # the primary still owns the only copy
+
+
+# -- stale stats fallback ----------------------------------------------------
+
+
+def test_dead_replica_stats_fallback_is_stamped_stale(rf_setup, tmp_path):
+    """A dead member's last-known counters keep serving ``stats()`` but
+    must be distinguishable from live data: ``stale``/``dead`` flags,
+    an ``as_of_monotonic`` age stamp, and the fleet view lists the
+    member under ``stale_replicas``."""
+    ab, path, _ = rf_setup
+    fleet = spawn_fleet(2, path, str(tmp_path),
+                        tracer="repro.serve.rpc:synthetic_trace",
+                        heartbeat_interval=0.25, heartbeat_misses=2)
+    fe = ClusterFrontend(replicas=fleet, reshard_timeout=30,
+                         auto_exclude=False)  # keep the corpse around
+    try:
+        fe.start()
+        fe.predict_many([(cfg, 2, 32) for cfg in _cfgs(4)], timeout=60)
+        victim = fleet[0]
+        completed_before = victim.stats.completed  # populates the cache
+        t_cached = time.monotonic()
+        victim.kill()
+        deadline = time.monotonic() + 20
+        while not victim.dead:
+            assert time.monotonic() < deadline, "death never detected"
+            time.sleep(0.05)
+        d = victim.stats()
+        assert d["stale"] is True and d["dead"] is True
+        assert d["as_of_monotonic"] <= t_cached
+        assert d["completed"] == completed_before  # last words preserved
+        st = fe.stats()
+        assert victim.name in st["stale_replicas"]
+        assert st["fleet"]["completed"] >= completed_before
+    finally:
+        shutdown_fleet(fleet)
