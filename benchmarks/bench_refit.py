@@ -4,7 +4,11 @@ Simulates the deployment scenario the refit subsystem exists for: a
 predictor fit offline, a fleet whose real costs have drifted (times 3x,
 memory 1.5x — new kernels / contended hosts), and an admission loop
 that reports measured completions back through
-``AdmissionController.report_completion``. Measures:
+``AdmissionController.report_completion``. The workload itself comes
+from the scenario zoo (``repro.scenarios``): a one-tenant drift
+``ScenarioSpec`` expands to a seeded schedule whose unique queries form
+the admission working set, and whose tenant drift factors are the
+ground-truth law the refit must learn. Measures:
 
   * **pre-refit windowed MRE** — generation-0 predictions vs drifted
     reality (the error an open-loop deployment silently eats),
@@ -31,55 +35,48 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
-from repro.core.features import ProfileRecord
 from repro.core.scheduler import Machine
+from repro.scenarios import (ScenarioSpec, TenantSpec, TrafficSpec,
+                             config_from_payload, fit_abacus, fit_records,
+                             generate, scenario_trace)
 from repro.serve import (AbacusServer, AdmissionController, FeedbackStore,
                          OnlineRefitter, PredictionService, Query, TraceStore)
-
-try:  # package context (python -m benchmarks.run) or standalone script
-    from benchmarks.bench_server import (_fit_abacus,  # noqa: E402
-                                         _synthetic_records)
-except ImportError:
-    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-    from bench_server import _fit_abacus, _synthetic_records  # noqa: E402
 
 TIME_DRIFT, MEM_DRIFT = 3.0, 1.5
 
 
-class _Cfg:
-    """Duck-typed config: ``dots`` parameterizes the synthetic workload."""
-
-    def __init__(self, name, dots, layers):
-        self.name = name
-        self.family = "dense"
-        self.dots = float(dots)
-        self.num_layers = int(layers)
-
-
-def _tracer(cfg, batch, seq):
-    """Features follow the same generative law as the seed records."""
-    dots = cfg.dots
-    flops = batch * seq * dots * 1e6
-    edges = {("dot", "add"): dots, ("add", "tanh"): dots,
-             ("tanh", "dot"): max(1.0, dots - 1)}
-    return ProfileRecord(
-        model_name=cfg.name, family=cfg.family, batch_size=batch,
-        input_size=seq, channels=64, learning_rate=1e-3, epoch=1,
-        optimizer="adamw", layers=cfg.num_layers, flops=flops,
-        params=int(dots * 1e5), nsm_edges=edges)
+def drift_spec(smoke: bool) -> ScenarioSpec:
+    """One drifted tenant, every submit observed — the refit workload."""
+    n_cfgs = 4 if smoke else 10
+    return ScenarioSpec(
+        name="refit-drift", seed=13, duration_s=2.0,
+        tenants=[TenantSpec(name="net", n_configs=n_cfgs,
+                            dots=(8.0, 8.0 + 6.0 * (n_cfgs - 1)),
+                            batches=(2, 4, 8), seqs=(32, 64),
+                            time_drift=TIME_DRIFT, mem_drift=MEM_DRIFT,
+                            observe_fraction=1.0)],
+        traffic=TrafficSpec(base_rate=60.0 * n_cfgs))
 
 
 def _workload(smoke: bool):
-    n_cfgs = 4 if smoke else 10
-    cfgs = [_Cfg(f"net{i}", dots=8 + 6 * i, layers=2 + i)
-            for i in range(n_cfgs)]
-    return [Query(c, b, s) for c in cfgs for b in (2, 4, 8) for s in (32, 64)]
+    """Unique (cfg, batch, seq) queries from the drift schedule, in
+    first-appearance order."""
+    sched = generate(drift_spec(smoke))
+    seen, queries = set(), []
+    for ev in sched:
+        if ev["op"] != "submit":
+            continue
+        key = (ev["cfg"]["name"], ev["batch"], ev["seq"])
+        if key in seen:
+            continue
+        seen.add(key)
+        queries.append(Query(config_from_payload(ev["cfg"]),
+                             ev["batch"], ev["seq"]))
+    return queries
 
 
 def run(smoke: bool = True, out: str = "BENCH_refit.json"):
-    ab = _fit_abacus()
+    ab = fit_abacus()
     queries = _workload(smoke)
     root = tempfile.mkdtemp(prefix="abacus_refit_")
     try:
@@ -90,10 +87,10 @@ def run(smoke: bool = True, out: str = "BENCH_refit.json"):
 
 
 def _run_inner(ab, queries, root, smoke, out):
-    svc = PredictionService(ab, tracer=_tracer,
+    svc = PredictionService(ab, tracer=scenario_trace,
                             store=TraceStore(os.path.join(root, "traces")))
     fb = FeedbackStore(os.path.join(root, "fb"))
-    ref = OnlineRefitter(svc, fb, seed_records=_synthetic_records(),
+    ref = OnlineRefitter(svc, fb, seed_records=fit_records(),
                          min_observations=len(queries), feedback_repeat=4)
     with AbacusServer(svc, feedback=fb, refitter=ref) as srv:
         ctl = AdmissionController(srv, [Machine("m", 1e21)], plan="optimal")

@@ -2,8 +2,11 @@
 
 Spawns a 4-replica RPC fleet (``python -m repro.serve.rpc`` children
 over a shared-disk store layout), warms a working set, then SIGKILLs
-one replica while client threads keep submitting. The healing story
-under test, end to end:
+one replica while a seeded scenario schedule (``repro.scenarios``)
+keeps replaying against the frontend — the chaos load is scenario zoo
+data, not a hand-rolled thread loop, so the exact byte sequence of
+submits is reproducible from the spec. The healing story under test,
+end to end:
 
   * every in-flight Future resolves — hedged to the next ring owner,
     retried after the death verdict, or replayed through the exclusion
@@ -29,56 +32,32 @@ import sys
 import tempfile
 import threading
 import time
-from concurrent.futures import Future
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
-from repro.core.automl.models import RandomForestRegressor
-from repro.core.features import ProfileRecord
-from repro.core.predictor import DNNAbacus
+from repro.scenarios import (ScenarioRunner, ScenarioSpec, TenantSpec,
+                             TrafficSpec, config_from_payload, fit_abacus,
+                             generate, scenario_trace)
+from repro.scenarios.workload import tenant_payloads
 from repro.serve import ClusterFrontend
 from repro.serve.prediction_service import config_fingerprint
-from repro.serve.rpc import shutdown_fleet, spawn_fleet, synthetic_trace
+from repro.serve.rpc import shutdown_fleet, spawn_fleet
+
+BATCHES, SEQ = (2, 4), 32
 
 
-def _fit_records(n=80, seed=0):
-    rng = np.random.default_rng(seed)
-    recs = []
-    for i in range(n):
-        batch = int(rng.choice([2, 4, 8, 16]))
-        seq = int(rng.choice([32, 64, 128]))
-        dots = float(rng.integers(4, 60))
-        flops = batch * seq * dots * 1e6
-        edges = {("dot", "add"): dots, ("add", "tanh"): dots,
-                 ("tanh", "dot"): dots - 1}
-        recs.append(ProfileRecord(
-            model_name=f"m{i}", family="dense", batch_size=batch,
-            input_size=seq, channels=64, learning_rate=1e-3, epoch=1,
-            optimizer="adamw", layers=int(rng.integers(2, 16)), flops=flops,
-            params=int(dots * 1e5), nsm_edges=edges,
-            time_s=flops / 5e10, mem_bytes=1e6 * dots + 4.0 * batch * seq))
-    return recs
+def _tenant(n_cfgs: int) -> TenantSpec:
+    return TenantSpec(name="job", n_configs=n_cfgs, dots=(6.0, 54.0),
+                      batches=BATCHES, seqs=(SEQ,), observe_fraction=0.0)
 
 
-def _fit_abacus(seed=0):
-    # RandomForest: per-row exact predictions, so RPC micro-batch
-    # composition (frames split across ticks) cannot wobble the last ULP
-    fac = lambda s: [RandomForestRegressor(n_trees=10, seed=s)]
-    return DNNAbacus(seed=seed).fit(_fit_records(seed=seed),
-                                    candidate_factory=fac)
-
-
-class _Cfg:
-    """Duck-typed config: distinct fingerprints, cheap to hash."""
-
-    def __init__(self, i):
-        self.name = f"job{i:04d}"
-        self.family = "dense"
-        self.num_layers = 2 + i % 14
-        self.d_model = 64 + 16 * (i % 8)
-        self.widen = 1.0 + 0.125 * (i % 4)
+def chaos_spec(n_cfgs: int, smoke: bool) -> ScenarioSpec:
+    """Submit-only burst schedule replayed through the kill window."""
+    return ScenarioSpec(
+        name="rpc-chaos", seed=11, duration_s=40.0,
+        tenants=[_tenant(n_cfgs)],
+        traffic=TrafficSpec(base_rate=25.0 if smoke else 60.0,
+                            burst_amplitude=0.5, burst_period_s=10.0))
 
 
 def _verdict(est):
@@ -89,25 +68,26 @@ def _verdict(est):
 
 
 def run(smoke: bool = True, out: str = "BENCH_rpc.json"):
-    n_keys = 24 if smoke else 96
+    n_cfgs = 12 if smoke else 48
     n_replicas = 4
-    n_clients = 3 if smoke else 6
-    ab = _fit_abacus()
-    keyset = [(_Cfg(i), 2 + 2 * (i % 2), 32) for i in range(n_keys)]
+    ab = fit_abacus()
+    keyset = [(config_from_payload(p), b, SEQ)
+              for p in tenant_payloads(_tenant(n_cfgs)) for b in BATCHES]
     root = tempfile.mkdtemp(prefix="abacus_rpc_")
     fleet = []
     try:
         # the in-process fleet is the byte-for-byte oracle
         with ClusterFrontend(ab, n_replicas=n_replicas,
-                             tracer=synthetic_trace) as local:
+                             tracer=scenario_trace) as local:
             want = [_verdict(e) for e in local.predict_many(keyset, 120)]
-        want_by_model = {w[0]: w for w in want}
+        want_by_key = {(w[0], b, s): w
+                       for w, (_, b, s) in zip(want, keyset)}
 
         path = os.path.join(root, "predictor")
         ab.save(path)
         t0 = time.perf_counter()
         fleet = spawn_fleet(n_replicas, path, root,
-                            tracer="repro.serve.rpc:synthetic_trace",
+                            tracer="repro.scenarios.workload:scenario_trace",
                             heartbeat_interval=0.25, heartbeat_misses=2)
         spawn_s = time.perf_counter() - t0
         fe = ClusterFrontend(replicas=fleet, hedge_after_s=0.75,
@@ -121,24 +101,20 @@ def run(smoke: bool = True, out: str = "BENCH_rpc.json"):
 
         victim = fe.replica_for(config_fingerprint(keyset[0][0]))
 
-        futs, flock = [], threading.Lock()
-        stop_load = threading.Event()
+        # chaos window: the scenario schedule replays in the background
+        # while the main thread murders the victim mid-stream
+        sched = generate(chaos_spec(n_cfgs, smoke))
+        replay: dict = {}
 
-        def load():
-            while not stop_load.is_set():
-                for cfg, batch, seq in keyset:
-                    try:
-                        f = fe.submit(cfg, batch, seq)
-                    except Exception as e:
-                        f = Future()
-                        f.set_exception(e)
-                    with flock:
-                        futs.append(f)
-                time.sleep(0.01)
+        def _replay():
+            try:
+                replay["result"] = ScenarioRunner(
+                    fe, sched, time_scale=0.1, result_timeout=120).run()
+            except Exception as e:  # surfaced as a gate failure below
+                replay["error"] = e
 
-        threads = [threading.Thread(target=load) for _ in range(n_clients)]
-        for t in threads:
-            t.start()
+        th = threading.Thread(target=_replay)
+        th.start()
         time.sleep(0.3)
         t_kill = time.perf_counter()
         victim.kill()  # SIGKILL: no drain, no goodbye
@@ -147,19 +123,19 @@ def run(smoke: bool = True, out: str = "BENCH_rpc.json"):
             time.sleep(0.02)
         excl_s = time.perf_counter() - t_kill
         excluded = victim.name not in fe._by_name
-        time.sleep(0.5)  # keep loading through the healed ring
-        stop_load.set()
-        for t in threads:
-            t.join(60)
+        th.join(300)
+        if "result" not in replay:
+            raise replay.get("error") or RuntimeError("replay never finished")
+        result = replay["result"]
 
-        resolve_errors = chaos_mismatches = 0
-        for f in futs:
-            try:
-                est = f.result(120)
-            except Exception:
-                resolve_errors += 1
-                continue
-            if _verdict(est) != want_by_model[est["model"]]:
+        resolve_errors = (result.ground["failed"]
+                          + result.ground["submit_rejected"])
+        chaos_mismatches = 0
+        for o in result.resolved_outcomes():
+            verdict = (o["model"], round(o["time_s"], 12),
+                       round(o["mem_bytes"], 6), o["admitted"],
+                       o["generation"])
+            if verdict != want_by_key[(o["model"], o["batch"], o["seq"])]:
                 chaos_mismatches += 1
 
         # post-heal: warm keys come off the MIGRATED slices, no tracing
@@ -171,11 +147,11 @@ def run(smoke: bool = True, out: str = "BENCH_rpc.json"):
 
         rows = [
             ("replicas", float(n_replicas)),
-            ("working_set", float(n_keys)),
-            ("clients", float(n_clients)),
+            ("working_set", float(len(keyset))),
+            ("schedule_events", float(len(sched))),
             ("spawn_s", spawn_s),
             ("warm_pass_s", warm_s),
-            ("futures_submitted", float(len(futs))),
+            ("futures_submitted", float(result.ground["submitted"])),
             ("resolve_errors", float(resolve_errors)),
             ("chaos_verdict_mismatches", float(chaos_mismatches)),
             ("excluded", float(excluded)),

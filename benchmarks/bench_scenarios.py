@@ -1,0 +1,169 @@
+"""Composed drift scenario: burst + tenant drift + replica kill + resize.
+
+Runs the scenario zoo end to end against a live in-process 4-replica
+``ClusterFrontend``: diurnal bursty traffic from two drifting tenants
+(plus adversarial fingerprint churn), a mid-stream hardware-profile
+swap, a generation publish, one replica kill, a 4 -> 6 live resize, and
+a second publish on the grown fleet. Gates:
+
+  * **determinism** — the generated schedule's JSONL bytes hash
+    identically in THIS process and in two fresh interpreters pinned to
+    different ``PYTHONHASHSEED``s,
+  * **all six oracles** — every future resolved, ``stats()`` and
+    ``metrics_snapshot()`` counters exactly equal the runner's ground
+    truth (queries / hedges / gen_swaps / exclusions, with the retired
+    ledger covering the killed replica), legacy stats keys intact,
+    calibration drift inside the schedule's bounds, and estimate parity
+    vs a fresh single-service replay per generation.
+
+Artifacts for postmortem replay: ``--schedule-out`` (the JSONL
+schedule), ``--metrics-out`` (Prometheus text exposition), and
+``--events-out`` (the structured event log).
+
+    PYTHONPATH=src python benchmarks/bench_scenarios.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import events
+from repro.scenarios import (FaultSpec, ProfileSwap, ScenarioRunner,
+                             ScenarioSpec, TenantSpec, TrafficSpec, check_all,
+                             fit_abacus, generate, scenario_trace,
+                             schedule_digest, schedule_digest_subprocess)
+from repro.serve import ClusterFrontend
+
+HASH_SEEDS = (0, 4242)
+
+
+def composed_spec(smoke: bool = True) -> ScenarioSpec:
+    """The CI composed scenario: every fault class in one schedule."""
+    return ScenarioSpec(
+        name="composed", seed=20250808, duration_s=6.0 if smoke else 12.0,
+        tenants=[
+            TenantSpec(name="batch", weight=2.0, n_configs=5,
+                       dots=(8.0, 48.0), time_drift=3.0, mem_drift=1.5,
+                       observe_fraction=0.6),
+            TenantSpec(name="interactive", weight=1.0, n_configs=3,
+                       dots=(12.0, 36.0), batches=(2, 4), seqs=(32,),
+                       time_drift=0.8, mem_drift=1.0,
+                       observe_fraction=0.4),
+        ],
+        traffic=TrafficSpec(base_rate=60.0 if smoke else 150.0,
+                            burst_amplitude=0.9, burst_period_s=4.0),
+        churn_rate=2.0,
+        swaps=[ProfileSwap(t=3.0, tenant="batch",
+                           time_drift=2.0, mem_drift=1.2)],
+        faults=[FaultSpec(t=1.5, kind="publish"),
+                FaultSpec(t=2.5, kind="kill", target="r1"),
+                FaultSpec(t=4.0, kind="resize", n=6),
+                FaultSpec(t=5.0, kind="publish")])
+
+
+def run(smoke: bool = True, out: str = "BENCH_scenarios.json",
+        schedule_out: str = "", metrics_out: str = "", events_out: str = ""):
+    spec = composed_spec(smoke)
+    sched = generate(spec)
+
+    # byte-identity across processes and hash seeds, checked first: a
+    # non-deterministic schedule would invalidate everything downstream
+    t0 = time.perf_counter()
+    local_digest = schedule_digest(spec)
+    sub_digests = [schedule_digest_subprocess(spec, hs) for hs in HASH_SEEDS]
+    digest_s = time.perf_counter() - t0
+    deterministic = all(d == local_digest for d in sub_digests)
+
+    if events_out:
+        events.configure(path=events_out)
+    if schedule_out:
+        sched.save(schedule_out)
+    root = tempfile.mkdtemp(prefix="abacus_scen_")
+    try:
+        fleet = ClusterFrontend(fit_abacus(), n_replicas=4,
+                                trace_root=os.path.join(root, "traces"),
+                                feedback_root=os.path.join(root, "fb"),
+                                tracer=scenario_trace)
+        fleet.start()
+        try:
+            result = ScenarioRunner(
+                fleet, sched, time_scale=0.0 if smoke else 0.01).run()
+            if metrics_out:
+                with open(metrics_out, "w") as f:
+                    f.write(fleet.metrics_text())
+        finally:
+            fleet.stop()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+        if events_out:
+            events.configure(path=None)
+
+    oracles = check_all(result)
+    g = result.ground
+    rows = [
+        ("n_events", float(len(sched))),
+        ("submitted", float(g["submitted"])),
+        ("resolved", float(g["resolved"])),
+        ("failed", float(g["failed"])),
+        ("observations", float(g["observes_issued"])),
+        ("publishes", float(g["publishes"])),
+        ("expected_gen_swaps", float(g["expected_gen_swaps"])),
+        ("kills", float(g["kills"])),
+        ("resizes", float(g["resizes"])),
+        ("replicas_final", float(result.stats_after["replicas"])),
+        ("replay_wall_s", result.wall_s),
+        ("digest_check_s", digest_s),
+        ("deterministic", float(deterministic)),
+    ]
+    rows += [(f"oracle_{r.name}", float(r.ok)) for r in oracles]
+    if out:
+        payload = {name: val for name, val in rows}
+        payload["smoke"] = smoke
+        payload["schedule_sha256"] = local_digest
+        payload["oracle_details"] = {r.name: r.detail for r in oracles}
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small composed scenario (seconds; CI tier-1)")
+    ap.add_argument("--out", default="BENCH_scenarios.json")
+    ap.add_argument("--schedule-out", default="",
+                    help="also save the generated schedule JSONL here")
+    ap.add_argument("--metrics-out", default="",
+                    help="also save the post-run Prometheus exposition")
+    ap.add_argument("--events-out", default="",
+                    help="also append the structured event log here")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke, out=args.out,
+               schedule_out=args.schedule_out, metrics_out=args.metrics_out,
+               events_out=args.events_out)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    d = dict(rows)
+    rc = 0
+    if not d["deterministic"]:
+        print("# FAIL: schedule bytes differ across PYTHONHASHSEED "
+              "subprocess runs", file=sys.stderr)
+        rc = 1
+    bad = [n for n, v in rows if n.startswith("oracle_") and not v]
+    if bad:
+        print(f"# FAIL: oracles violated: {', '.join(bad)}",
+              file=sys.stderr)
+        rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

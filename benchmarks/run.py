@@ -29,13 +29,37 @@ BENCHES = [
     ("reshard", "benchmarks.bench_reshard"),            # elastic resharding
     ("rpc", "benchmarks.bench_rpc"),                    # RPC fleet chaos
     ("obs", "benchmarks.bench_obs"),                    # telemetry plane
+    ("scenarios", "benchmarks.bench_scenarios"),        # drift-scenario zoo
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
+
+
+def aggregate_artifacts(root: str = ".") -> dict:
+    """Merge every ``BENCH_*.json`` under ``root`` into one dict keyed
+    by benchmark suffix; unreadable artifacts are skipped (a crashed
+    bench must not take the aggregate down with it)."""
+    import glob
+    import json
+    import os
+    out = {}
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        if name == "all":
+            continue  # never aggregate a previous aggregate
+        try:
+            with open(path) as f:
+                out[name] = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+    return out
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--aggregate", action="store_true",
+                    help="merge BENCH_*.json artifacts into BENCH_all.json "
+                         "after the run")
     args = ap.parse_args(argv)
     failures = 0
     for name, module in BENCHES:
@@ -55,6 +79,13 @@ def main(argv=None) -> int:
         # machine-readable wall time next to the benchmark's own rows
         print(f"{name}.wall_s,{wall:.6g}")
         print(f"# {name} done in {wall:.0f}s", flush=True)
+    if args.aggregate:
+        import json
+        agg = aggregate_artifacts()
+        with open("BENCH_all.json", "w") as f:
+            json.dump(agg, f, indent=2, sort_keys=True)
+        print(f"# aggregated {len(agg)} artifacts into BENCH_all.json",
+              flush=True)
     return 1 if failures else 0
 
 

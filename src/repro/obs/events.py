@@ -15,6 +15,9 @@ Canonical event kinds emitted by the serving stack:
 ``replica_dead``    heartbeat/EOF death verdict for a remote replica
 ``refit``           OnlineRefitter published a new generation
 ``refit_failed``    a refit cycle raised
+``scenario_start``  ScenarioRunner began replaying a schedule
+``scenario_fault``  a scheduled fault event fired (publish/kill/resize)
+``scenario_end``    replay finished (ground-truth counter summary)
 ==================  ======================================================
 
 Events always land in an in-memory ring buffer (``tail()``); optionally

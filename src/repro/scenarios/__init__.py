@@ -1,0 +1,51 @@
+"""Drift-scenario zoo: deterministic workload replay for the serving fleet.
+
+Every scale claim the serving stack makes — overload survival, refit
+MRE recovery, reshard parity, kill-and-heal — is exercised through one
+reusable, seeded scenario pipeline instead of bespoke bench loops:
+
+  * :mod:`repro.scenarios.workload` — declarative ``ScenarioSpec`` ->
+    ``generate()`` -> ``Schedule``: an explicit, JSONL-serializable
+    event schedule (bursty diurnal traffic, multi-tenant drift,
+    mid-stream profile swaps, adversarial fingerprint churn, fault
+    events). Same seed => byte-identical schedule across processes and
+    ``PYTHONHASHSEED``s.
+  * :mod:`repro.scenarios.runner` — ``ScenarioRunner`` replays a
+    schedule against an ``AbacusServer`` or ``ClusterFrontend``
+    (in-process or RPC), collecting per-query ground truth.
+  * :mod:`repro.scenarios.oracles` — invariant checkers that
+    cross-validate the run against the telemetry plane (counters,
+    metrics snapshot, legacy ``stats()`` keys, calibration drift,
+    estimate parity vs a fresh single-server replay).
+"""
+
+from repro.scenarios.oracles import OracleResult, check_all, failed
+from repro.scenarios.runner import ScenarioResult, ScenarioRunner
+from repro.scenarios.workload import (FaultSpec, ProfileSwap, ScenarioConfig,
+                                      ScenarioSpec, Schedule, TenantSpec,
+                                      TrafficSpec, config_from_payload,
+                                      fit_abacus, fit_records, generate,
+                                      scenario_trace, schedule_digest,
+                                      schedule_digest_subprocess)
+
+__all__ = [
+    "FaultSpec",
+    "OracleResult",
+    "ProfileSwap",
+    "ScenarioConfig",
+    "ScenarioResult",
+    "ScenarioRunner",
+    "ScenarioSpec",
+    "Schedule",
+    "TenantSpec",
+    "TrafficSpec",
+    "check_all",
+    "config_from_payload",
+    "failed",
+    "fit_abacus",
+    "fit_records",
+    "generate",
+    "scenario_trace",
+    "schedule_digest",
+    "schedule_digest_subprocess",
+]

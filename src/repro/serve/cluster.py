@@ -420,6 +420,15 @@ class ClusterFrontend:
             ("reshards", "keys_moved", "units_moved", "keys_skipped",
              "keys_replayed", "cutover_ticks", "hedges", "hedge_failures",
              "retries", "exclusions"))
+        # replicas excluded or removed take their ServerStats with them;
+        # this ledger banks every additive counter a leaver had
+        # contributed at departure, so fleet + retired is the all-time
+        # truth (`stats()["retired"]`, `fleet_retired_*_total`) even
+        # after kills and downsizes. max_batch is a high-water mark, not
+        # additive, so it stays out.
+        self.retired_stats = CounterDict(
+            self.metrics, "fleet_retired_",
+            tuple(c for c in ServerStats.COUNTERS if c != "max_batch"))
         self.metrics.register_callback(
             lambda: {"fleet_replicas": len(self.replicas)})
         # failure handling for transport-backed replicas (repro.serve.rpc):
@@ -1002,6 +1011,13 @@ class ClusterFrontend:
                     "once their in-flight micro-batches finish)")
             summary["cutover_ticks"] = (sum(r.stats.ticks for r in affected)
                                         - ticks_before)
+            # leavers are quiesced (or dead) now, so their counters are
+            # final: snapshot them here, bank them only after the
+            # cutover commits (an aborted reshard keeps its leavers, and
+            # banking early would double-count them on retry)
+            retiring = {r.name: {c: int(getattr(r.stats, c, 0) or 0)
+                                 for c in self.retired_stats}
+                        for r in affected if r.name not in names}
             # 2) migrate: hand exactly the moved slices to the new owners
             owners = {**self._by_name, **joiners}
             for src in affected:
@@ -1046,6 +1062,10 @@ class ClusterFrontend:
                   "cutover_ticks"):
             self.reshard_stats[k] += summary[k]
         self.reshard_stats["reshards"] += 1
+        for counters in retiring.values():
+            for c, v in counters.items():
+                self.retired_stats[c] += v
+        summary["retired"] = sorted(retiring)
         events.emit("reshard", members_from=summary["from"],
                     members_to=summary["to"],
                     keys_moved=summary["keys_moved"],
@@ -1211,6 +1231,7 @@ class ClusterFrontend:
             "replicas": len(self.replicas),
             "fleet": fleet,
             "reshard": dict(self.reshard_stats),
+            "retired": dict(self.retired_stats),
             "generations": sorted({r.service.generation
                                    for r in self.replicas}),
             "calibration": merge_calibration(

@@ -395,3 +395,80 @@ def test_split_serializes_concurrent_writer(tmp_path):
     # the concurrent write landed AFTER the unlink: nothing lost
     assert src.get_raw(key) == {"old": 1, "new": 1}
     assert dst.get_raw(key) == {"old": 1}  # migrated snapshot
+
+
+# -- compact under live readers, once per subclass level ----------------------
+
+
+def test_feedback_compact_is_safe_under_concurrent_readers(tmp_path):
+    """FeedbackStore's finer-grained compact (within-file pruning via
+    ``put_raw`` rewrites, not just unlinks) under hammering readers:
+    every ``get`` sees a validated observation list or nothing — never
+    a torn or half-pruned file."""
+    store = FeedbackStore(str(tmp_path))
+    keys = [("ab" * 8, batch, 32) for batch in range(2, 18, 2)]
+    for key in keys:
+        for ts in (1.0, 2.0, 3.0, 4.0):
+            store.add(key, time_s=ts, mem_bytes=1e6 * ts, ts=ts)
+    reader = FeedbackStore(str(tmp_path))         # separate stats/lock
+    stop = threading.Event()
+    errors = []
+
+    def hammer():
+        while not stop.is_set():
+            for key in keys:
+                try:
+                    for obs in reader.get(key):   # validated or absent
+                        assert obs.time_s > 0 and obs.mem_bytes > 0
+                except Exception as e:  # pragma: no cover
+                    errors.append(e)
+                    return
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for cap in (3, 2, 1):
+        store.compact(max_per_key=cap)
+    stop.set()
+    for t in threads:
+        t.join(10)
+    assert not errors
+    # newest observation per key survives the whole ladder
+    for key in keys:
+        remaining = store.get(key)
+        assert len(remaining) == 1
+        assert remaining[0].ts == 4.0
+
+
+def test_base_compact_is_safe_under_concurrent_readers(tmp_path):
+    """The shared ``JsonFileStore.compact`` ladder at the bare-base
+    level (``_TagStore``): unlink-only compaction never tears a
+    concurrent ``get_raw``."""
+    store = _TagStore(str(tmp_path))
+    keys = [("cd" * 8, batch, 32) for batch in range(2, 34, 2)]
+    for n, key in enumerate(keys):
+        store.put_raw(key, {"tag": n + 1})
+    reader = _TagStore(str(tmp_path))             # separate stats/lock
+    stop = threading.Event()
+    errors = []
+
+    def hammer():
+        while not stop.is_set():
+            for key in keys:
+                try:
+                    raw = reader.get_raw(key)     # dict or None, never torn
+                    assert raw is None or int(raw["tag"]) > 0
+                except Exception as e:  # pragma: no cover
+                    errors.append(e)
+                    return
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for cap in (12, 6, 2, 0):
+        store.compact(max_entries=cap)
+    stop.set()
+    for t in threads:
+        t.join(10)
+    assert not errors
+    assert len(store) == 0

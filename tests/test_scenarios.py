@@ -1,0 +1,244 @@
+"""Scenario zoo: schedule determinism, replay round-trips, oracle teeth.
+
+The determinism property is the foundation everything else stands on:
+same seed => byte-identical JSONL, across processes and PYTHONHASHSEEDs
+(checked in fresh subprocess interpreters). The oracle tests then prove
+the invariant checkers have teeth — a replay passes all six, and an
+injected undercount in either telemetry plane is caught.
+"""
+
+import copy
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _hypo import given, settings, st
+
+from repro.scenarios import (FaultSpec, ProfileSwap, ScenarioRunner,
+                             ScenarioSpec, Schedule, TenantSpec, TrafficSpec,
+                             check_all, config_from_payload, failed,
+                             fit_abacus, generate, scenario_trace,
+                             schedule_digest, schedule_digest_subprocess)
+from repro.scenarios.oracles import (oracle_counters, oracle_legacy_stats,
+                                     oracle_metrics_parity)
+from repro.serve import AbacusServer, ClusterFrontend, PredictionService
+from repro.serve.prediction_service import config_fingerprint
+
+
+def _small_spec(seed=3, **kw):
+    base = dict(
+        name="unit", seed=seed, duration_s=2.0,
+        tenants=[TenantSpec(name="a", weight=2.0, n_configs=3,
+                            time_drift=2.0, mem_drift=1.25,
+                            observe_fraction=0.5),
+                 TenantSpec(name="b", weight=1.0, n_configs=2,
+                            dots=(10.0, 20.0), time_drift=0.8,
+                            observe_fraction=0.5)],
+        traffic=TrafficSpec(base_rate=10.0, burst_amplitude=0.8,
+                            burst_period_s=2.0),
+        churn_rate=1.0,
+        swaps=[ProfileSwap(t=1.0, tenant="a", time_drift=4.0,
+                           mem_drift=1.5)],
+        faults=[FaultSpec(t=1.0, kind="publish")])
+    base.update(kw)
+    return ScenarioSpec(**base)
+
+
+@pytest.fixture(scope="module")
+def abacus():
+    return fit_abacus()
+
+
+# -- determinism --------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000))
+def test_same_seed_same_bytes(seed):
+    a = generate(_small_spec(seed=seed)).to_jsonl()
+    b = generate(_small_spec(seed=seed)).to_jsonl()
+    assert a == b
+    # a different seed always produces different bytes (the meta header
+    # embeds the seed even if the event stream were to coincide)
+    assert a != generate(_small_spec(seed=seed + 1)).to_jsonl()
+
+
+def test_digest_identical_across_hash_seeds():
+    spec = _small_spec(seed=17)
+    local = schedule_digest(spec)
+    for hash_seed in (0, 4242):
+        assert schedule_digest_subprocess(spec, hash_seed) == local
+
+
+def test_jsonl_round_trip(tmp_path):
+    sched = generate(_small_spec(seed=5))
+    assert len(sched) > 0
+    rt = Schedule.from_jsonl(sched.to_jsonl())
+    assert rt == sched
+    assert rt.to_jsonl() == sched.to_jsonl()
+    path = sched.save(str(tmp_path / "sched.jsonl"))
+    assert Schedule.load(path) == sched
+    # the embedded spec regenerates the identical schedule
+    spec2 = ScenarioSpec.from_dict(sched.meta["spec"])
+    assert generate(spec2).to_jsonl() == sched.to_jsonl()
+
+
+def test_meta_counts_and_drift_bounds():
+    sched = generate(_small_spec(seed=9))
+    counts = sched.meta["counts"]
+    assert counts["submit"] == sum(1 for e in sched if e["op"] == "submit")
+    assert counts["publish"] == 1
+    lo, hi = sched.meta["drift"]["time"]
+    # bounds cover exactly the factors present: drift = 1/factor - 1
+    factors = {e["observe"]["time_factor"] for e in sched
+               if e["op"] == "submit" and e["observe"]}
+    assert factors <= {2.0, 4.0, 0.8}  # base a, swapped a, base b
+    assert lo == pytest.approx(1 / max(factors) - 1)
+    assert hi == pytest.approx(1 / min(factors) - 1)
+
+
+def test_churn_configs_are_near_misses():
+    sched = generate(_small_spec(seed=21, churn_rate=3.0))
+    churned = [e for e in sched
+               if e["op"] == "submit" and "nonce" in e["cfg"]]
+    assert churned, "churn_rate=3 over 2s should emit churn submits"
+    fps = set()
+    for ev in churned:
+        cfg = config_from_payload(ev["cfg"])
+        base = dict(ev["cfg"])
+        base.pop("nonce")
+        base["name"] = base["name"].split("-churn")[0]
+        base_cfg = config_from_payload(base)
+        # fresh fingerprint (cache miss) ...
+        assert config_fingerprint(cfg) != config_fingerprint(base_cfg)
+        fps.add(config_fingerprint(cfg))
+        # ... but identical features modulo the name: a true near-miss
+        rec = scenario_trace(cfg, 4, 32)
+        base_rec = scenario_trace(base_cfg, 4, 32)
+        assert rec.flops == base_rec.flops
+        assert rec.nsm_edges == base_rec.nsm_edges
+    assert len(fps) == len(churned), "every churned config is unique"
+    assert all(ev["observe"] is None for ev in churned)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        generate(_small_spec(tenants=[]))
+    with pytest.raises(ValueError):
+        generate(_small_spec(
+            tenants=[TenantSpec(name="a", weight=0.0)]))
+    with pytest.raises(ValueError):
+        generate(_small_spec(
+            faults=[FaultSpec(t=0.5, kind="explode")]))
+
+
+# -- replay + oracles ---------------------------------------------------------
+
+
+def test_server_replay_all_oracles_pass(abacus):
+    spec = _small_spec(seed=31)
+    with AbacusServer(PredictionService(abacus,
+                                        tracer=scenario_trace)) as srv:
+        result = ScenarioRunner(srv, generate(spec)).run()
+    assert not result.is_cluster
+    assert result.ground["expected_gen_swaps"] == 1  # one publish, one server
+    bad = failed(check_all(result))
+    assert not bad, [(r.name, r.detail) for r in bad]
+
+
+def test_cluster_replay_with_kill_and_resize(abacus, tmp_path):
+    spec = _small_spec(
+        seed=37,
+        faults=[FaultSpec(t=0.5, kind="publish"),
+                FaultSpec(t=1.0, kind="kill", target="r1"),
+                FaultSpec(t=1.5, kind="resize", n=4)])
+    fleet = ClusterFrontend(abacus, n_replicas=3,
+                            trace_root=str(tmp_path / "traces"),
+                            feedback_root=str(tmp_path / "fb"),
+                            tracer=scenario_trace)
+    fleet.start()
+    try:
+        result = ScenarioRunner(fleet, generate(spec)).run()
+    finally:
+        fleet.stop()
+    g = result.ground
+    assert g["kills"] == 1 and g["resizes"] == 1
+    assert g["expected_gen_swaps"] == 3
+    bad = failed(check_all(result))
+    assert not bad, [(r.name, r.detail) for r in bad]
+    # the killed replica's counters live on in the retired ledger
+    assert result.stats_after["retired"]["submitted"] > 0
+    check_all(result, raise_on_fail=True)  # does not raise when green
+
+
+def test_oracles_catch_injected_undercount(abacus, tmp_path):
+    spec = _small_spec(seed=41, faults=[])
+    fleet = ClusterFrontend(abacus, n_replicas=2,
+                            trace_root=str(tmp_path / "traces"),
+                            feedback_root=str(tmp_path / "fb"),
+                            tracer=scenario_trace)
+    fleet.start()
+    try:
+        result = ScenarioRunner(fleet, generate(spec)).run()
+    finally:
+        fleet.stop()
+    assert not failed(check_all(result))
+
+    # stats-plane undercount: fleet counter loses a query
+    mutated = copy.deepcopy(result)
+    mutated.stats_after["fleet"]["submitted"] -= 1
+    assert not oracle_counters(mutated).ok
+
+    # metrics-plane undercount: the exposed series drifts from truth
+    mutated = copy.deepcopy(result)
+    mutated.metrics_after["server_submitted_total"]["value"] += 1
+    assert not oracle_metrics_parity(mutated).ok
+
+    # a legacy stats key vanishing is itself a violation
+    mutated = copy.deepcopy(result)
+    del mutated.stats_after["reshard"]
+    assert not oracle_legacy_stats(mutated).ok
+
+    with pytest.raises(AssertionError):
+        mutated = copy.deepcopy(result)
+        mutated.stats_after["fleet"]["gen_swaps"] += 1
+        check_all(mutated, raise_on_fail=True)
+
+
+@pytest.mark.scenario
+@pytest.mark.slow
+def test_long_composed_scenario(abacus, tmp_path):
+    """Tier-2: a bigger composed scenario — burst + drift + churn +
+    publish/kill/resize/publish on a 4 -> 6 fleet, all oracles exact."""
+    spec = ScenarioSpec(
+        name="composed-long", seed=97, duration_s=10.0,
+        tenants=[TenantSpec(name="batch", weight=2.0, n_configs=6,
+                            time_drift=3.0, mem_drift=1.5,
+                            observe_fraction=0.6),
+                 TenantSpec(name="interactive", weight=1.0, n_configs=4,
+                            dots=(12.0, 36.0), time_drift=0.8,
+                            observe_fraction=0.4)],
+        traffic=TrafficSpec(base_rate=80.0, burst_amplitude=0.9,
+                            burst_period_s=5.0),
+        churn_rate=2.0,
+        swaps=[ProfileSwap(t=5.0, tenant="batch", time_drift=2.0,
+                           mem_drift=1.2)],
+        faults=[FaultSpec(t=2.0, kind="publish"),
+                FaultSpec(t=4.0, kind="kill", target="r2"),
+                FaultSpec(t=6.0, kind="resize", n=6),
+                FaultSpec(t=8.0, kind="publish")])
+    fleet = ClusterFrontend(abacus, n_replicas=4,
+                            trace_root=str(tmp_path / "traces"),
+                            feedback_root=str(tmp_path / "fb"),
+                            tracer=scenario_trace)
+    fleet.start()
+    try:
+        result = ScenarioRunner(fleet, generate(spec)).run()
+    finally:
+        fleet.stop()
+    assert result.ground["submitted"] > 400
+    assert result.stats_after["replicas"] == 6
+    bad = failed(check_all(result))
+    assert not bad, [(r.name, r.detail) for r in bad]
