@@ -30,6 +30,7 @@ BENCHES = [
     ("rpc", "benchmarks.bench_rpc"),                    # RPC fleet chaos
     ("obs", "benchmarks.bench_obs"),                    # telemetry plane
     ("scenarios", "benchmarks.bench_scenarios"),        # drift-scenario zoo
+    ("overload", "benchmarks.bench_overload"),          # shed/EDF/quota gates
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
 ]
 

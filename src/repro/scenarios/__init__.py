@@ -19,14 +19,16 @@ reusable, seeded scenario pipeline instead of bespoke bench loops:
     estimate parity vs a fresh single-server replay).
 """
 
-from repro.scenarios.oracles import OracleResult, check_all, failed
+from repro.scenarios.oracles import (OracleResult, check_all, failed,
+                                     oracle_overload_accounting)
 from repro.scenarios.runner import ScenarioResult, ScenarioRunner
 from repro.scenarios.workload import (FaultSpec, ProfileSwap, ScenarioConfig,
                                       ScenarioSpec, Schedule, TenantSpec,
                                       TrafficSpec, config_from_payload,
                                       fit_abacus, fit_records, generate,
                                       scenario_trace, schedule_digest,
-                                      schedule_digest_subprocess)
+                                      schedule_digest_subprocess,
+                                      tenant_overload_spec)
 
 __all__ = [
     "FaultSpec",
@@ -45,7 +47,9 @@ __all__ = [
     "fit_abacus",
     "fit_records",
     "generate",
+    "oracle_overload_accounting",
     "scenario_trace",
     "schedule_digest",
     "schedule_digest_subprocess",
+    "tenant_overload_spec",
 ]

@@ -48,15 +48,24 @@ from typing import Dict, List, Optional
 from repro.obs import events
 from repro.scenarios.workload import Schedule, config_from_payload
 from repro.serve.refit import ModelGeneration
+from repro.serve.server import DeadlineExceeded, QuotaExceeded
 
 #: counters a retired (excluded/removed) replica contributed before it
 #: left the fleet — everything additive in ``ServerStats.COUNTERS``
-#: (``max_batch`` is a high-water mark, not additive)
+#: (``max_batch`` is a high-water mark, not additive).
+#: Overload ground truth: ``expired`` counts every DeadlineExceeded
+#: outcome (``replay_expired`` is the subset expired at the *frontend*,
+#: i.e. a parked/replayed query that never reached a replica again);
+#: ``shed`` counts estimates answered degraded from the roofline floor;
+#: ``quota_rejected`` counts per-tenant admission rejections (sync
+#: raises AND failed futures — the via-future form also retro-decrements
+#: ``submitted``, because the server never accepted the query).
 GROUND_KEYS = (
     "submitted", "resolved", "failed", "submit_rejected",
     "observes_issued", "observe_failed", "publishes",
     "expected_gen_swaps", "kills", "expected_exclusions", "resizes",
     "sigstops", "skipped_events",
+    "expired", "shed", "quota_rejected", "replay_expired",
 )
 
 
@@ -189,8 +198,23 @@ class ScenarioRunner:
     # -- submits + observations ----------------------------------------------
     def _do_submit(self, ev: Dict) -> None:
         cfg = config_from_payload(ev["cfg"])
+        kw = {}
+        if ev.get("tenant"):
+            kw["tenant"] = ev["tenant"]
+        if ev.get("deadline") is not None:
+            # budget (seconds) -> absolute monotonic deadline, anchored
+            # at dispatch so queueing (not schedule skew) consumes it
+            kw["deadline"] = time.monotonic() + float(ev["deadline"])
         try:
-            fut = self.target.submit(cfg, ev["batch"], ev["seq"])
+            fut = self.target.submit(cfg, ev["batch"], ev["seq"], **kw)
+        except QuotaExceeded as e:
+            # typed rejection BEFORE submitted is counted: the server
+            # refused the query at the door, so neither side counts it
+            self._bump("quota_rejected")
+            self.outcomes[ev["i"]] = {"i": ev["i"], "t": ev["t"],
+                                      "tenant": ev["tenant"], "ok": False,
+                                      "quota": True, "error": repr(e)}
+            return
         except Exception as e:
             self._bump("submit_rejected")
             self.outcomes[ev["i"]] = {"i": ev["i"], "t": ev["t"],
@@ -209,6 +233,29 @@ class ScenarioRunner:
             ev, cfg, fut = item
             try:
                 est = fut.result(self.result_timeout)
+            except DeadlineExceeded as e:
+                # a cleanly expired future is an *accounted* outcome, not
+                # a failure: the SLO was missed, dead work was not served
+                self._bump("expired")
+                if getattr(e, "where", "") == "frontend":
+                    self._bump("replay_expired")
+                self.outcomes[ev["i"]] = {"i": ev["i"], "t": ev["t"],
+                                          "tenant": ev["tenant"],
+                                          "ok": False, "expired": True,
+                                          "where": getattr(e, "where", ""),
+                                          "error": repr(e)}
+                continue
+            except QuotaExceeded as e:
+                # via-future quota rejection (the RPC transport relays
+                # the server's sync refusal as a failed reply): the
+                # server never accepted it, so undo the dispatch count
+                self._bump("quota_rejected")
+                self._bump("submitted", -1)
+                self.outcomes[ev["i"]] = {"i": ev["i"], "t": ev["t"],
+                                          "tenant": ev["tenant"],
+                                          "ok": False, "quota": True,
+                                          "error": repr(e)}
+                continue
             except Exception as e:
                 self._bump("failed")
                 self.outcomes[ev["i"]] = {"i": ev["i"], "t": ev["t"],
@@ -216,6 +263,8 @@ class ScenarioRunner:
                                           "ok": False, "error": repr(e)}
                 continue
             self._bump("resolved")
+            if est.get("degraded"):
+                self._bump("shed")
             self.outcomes[ev["i"]] = {
                 "i": ev["i"], "t": ev["t"], "tenant": ev["tenant"],
                 "ok": True, "cfg": ev["cfg"], "batch": ev["batch"],
@@ -225,6 +274,7 @@ class ScenarioRunner:
                 "admitted": est.get("admitted"),
                 "generation": est.get("generation"),
                 "replica": est.get("replica"),
+                "degraded": bool(est.get("degraded", False)),
             }
             obs = ev.get("observe")
             if not obs:

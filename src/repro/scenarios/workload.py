@@ -156,6 +156,12 @@ class TenantSpec:
     time_drift: float = 1.0        # measured time = estimate x factor
     mem_drift: float = 1.0         # measured mem  = estimate x factor
     observe_fraction: float = 0.5  # fraction of submits that report back
+    # SLO budget (virtual seconds) stamped on every submit of this
+    # tenant; None = no deadline. The runner converts it to an absolute
+    # monotonic deadline at submit time, so replay speed (time_scale)
+    # does not distort it. Emitted into the event only when set — specs
+    # without deadlines keep their historical schedule bytes.
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -245,6 +251,41 @@ def tenant_payloads(tenant: TenantSpec) -> List[Dict]:
             "dots": round(lo + (hi - lo) * frac, 6),
         })
     return out
+
+
+def tenant_overload_spec(smoke: bool = True, *,
+                         base_rate: Optional[float] = None,
+                         duration_s: Optional[float] = None) -> ScenarioSpec:
+    """The zoo's overload scenario: sustained many-times-capacity load.
+
+    Two tenants past a deliberately tight fleet (the harness pairs this
+    spec with a throttled predictor + small ``max_queue`` /
+    ``shed_watermark``): "bulk" floods the queue, "slo" rides a tight
+    per-query deadline. Exercises every overload path at once — quota
+    rejections (bulk exhausts its weighted share), sheds (watermark
+    crossings answered from the roofline floor), and deadline expiries
+    (slo queries EDF-expired under the backlog) — and the overload
+    oracle asserts the shed/expired/quota accounting is *exact* against
+    the runner's ground truth.
+    """
+    if base_rate is None:
+        base_rate = 400.0 if smoke else 1200.0
+    if duration_s is None:
+        duration_s = 4.0 if smoke else 10.0
+    return ScenarioSpec(
+        name="tenant_overload", seed=20250811,
+        duration_s=float(duration_s),
+        tenants=[
+            TenantSpec(name="bulk", weight=4.0, n_configs=4,
+                       dots=(8.0, 40.0), batches=(2, 4), seqs=(32,),
+                       observe_fraction=0.2),
+            TenantSpec(name="slo", weight=1.0, n_configs=2,
+                       dots=(12.0, 24.0), batches=(2,), seqs=(32,),
+                       observe_fraction=0.2, deadline_s=0.05),
+        ],
+        traffic=TrafficSpec(base_rate=float(base_rate),
+                            burst_amplitude=0.5, burst_period_s=2.0),
+    )
 
 
 # -- schedule -----------------------------------------------------------------
@@ -361,9 +402,12 @@ def generate(spec: ScenarioSpec) -> Schedule:
             if rng.random() < tn.observe_fraction:
                 ft, fm = _drift_at(spec, tn.name, t)
                 observe = {"time_factor": ft, "mem_factor": fm}
-            events.append({"i": i, "t": t, "op": "submit",
-                           "tenant": tn.name, "cfg": dict(payload),
-                           "batch": batch, "seq": seq, "observe": observe})
+            ev = {"i": i, "t": t, "op": "submit",
+                  "tenant": tn.name, "cfg": dict(payload),
+                  "batch": batch, "seq": seq, "observe": observe}
+            if tn.deadline_s is not None:
+                ev["deadline"] = round(float(tn.deadline_s), 6)
+            events.append(ev)
             i += 1
         # adversarial fingerprint churn: near-miss configs, never observed
         m = int(rng.poisson(spec.churn_rate)) if spec.churn_rate > 0 else 0
@@ -375,11 +419,14 @@ def generate(spec: ScenarioSpec) -> Schedule:
             payload["name"] = f"{payload['name']}-churn{churn_id:05d}"
             payload["nonce"] = churn_id
             churn_id += 1
-            events.append({"i": i, "t": t, "op": "submit",
-                           "tenant": tn.name, "cfg": payload,
-                           "batch": int(rng.choice(list(tn.batches))),
-                           "seq": int(rng.choice(list(tn.seqs))),
-                           "observe": None})
+            ev = {"i": i, "t": t, "op": "submit",
+                  "tenant": tn.name, "cfg": payload,
+                  "batch": int(rng.choice(list(tn.batches))),
+                  "seq": int(rng.choice(list(tn.seqs))),
+                  "observe": None}
+            if tn.deadline_s is not None:
+                ev["deadline"] = round(float(tn.deadline_s), 6)
+            events.append(ev)
             i += 1
     for fault in spec.faults:
         ev = {"i": i, "t": round(float(fault.t), 6), "op": str(fault.kind)}

@@ -17,12 +17,13 @@ from repro.serve.cluster import (ClusterFrontend, GatewayReplica,
                                  ReplicaNotRunning, ReplicaUnavailable,
                                  RingDiff)
 from repro.serve.feedback_store import (CalibrationWindow, FeedbackStore,
-                                        Observation)
+                                        Observation, TenantCalibration)
 from repro.serve.kvstore import JsonFileStore, atomic_write_json
 from repro.serve.prediction_service import (PredictionService, Query,
                                             config_fingerprint)
 from repro.serve.refit import ModelGeneration, OnlineRefitter
-from repro.serve.server import AbacusServer
+from repro.serve.server import (AbacusServer, DeadlineExceeded,
+                                QuotaExceeded)
 from repro.serve.trace_store import TraceStore
 
 # Lazy (PEP 562) so `python -m repro.serve.rpc` does not import the rpc
@@ -40,8 +41,10 @@ def __getattr__(name):
 
 
 __all__ = ["AdmissionController", "Verdict", "PredictionService", "Query",
-           "config_fingerprint", "AbacusServer", "TraceStore",
+           "config_fingerprint", "AbacusServer", "DeadlineExceeded",
+           "QuotaExceeded", "TraceStore",
            "FeedbackStore", "Observation", "CalibrationWindow",
+           "TenantCalibration",
            "OnlineRefitter", "ModelGeneration", "JsonFileStore",
            "atomic_write_json", "ClusterFrontend", "GatewayReplica",
            "GenerationPublisher", "HashRing", "RingDiff",

@@ -23,6 +23,7 @@ import dataclasses
 import itertools
 import threading
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -60,9 +61,13 @@ class AdmissionController:
     # makespans (a baseline statistic), which admission cannot commit
     ASSIGNING_PLANS = ("ga", "optimal")
 
+    #: completed-job summaries retained for idempotent re-reports
+    COMPLETED_CACHE = 1024
+
     def __init__(self, predictor, machines: Sequence[Machine],
                  plan: str = "ga", time_scale: float = 1.0,
-                 mem_pad: float = 0.0, metrics=None, **plan_kw):
+                 mem_pad: float = 0.0, metrics=None,
+                 tenant_calibration=None, **plan_kw):
         if plan not in self.ASSIGNING_PLANS:
             raise ValueError(
                 f"plan {plan!r} does not produce an assignment; "
@@ -93,6 +98,15 @@ class AdmissionController:
         # is kept so a completion report can feed the measured outcome —
         # joined with what we *predicted* — back into the refit loop.
         self._resident: Dict[str, tuple] = {}
+        # job_id -> completion summary: duplicate report_completion calls
+        # (a retried caller) get the cached summary instead of a
+        # double-release; bounded so long-lived controllers don't leak.
+        self._completed: "OrderedDict[str, Dict]" = OrderedDict()
+        # per-tenant drift source for reservation inflation: explicit, or
+        # borrowed from the predictor (the AbacusServer gateway owns one)
+        self.tenant_calibration = (
+            tenant_calibration if tenant_calibration is not None
+            else getattr(predictor, "tenant_calibration", None))
         self._ids = itertools.count()
         self._lock = threading.Lock()
 
@@ -105,9 +119,20 @@ class AdmissionController:
         t_wave = time.perf_counter()
         ests = self.predictor.predict_many(qs)
         names = [f"{e['model']}#{next(self._ids)}" for e in ests]
+        times = [e["time_s"] for e in ests]
+        mems = [e["memory_bytes"] for e in ests]
+        if self.tenant_calibration is not None:
+            # inflate reservations by each tenant's own observed drift:
+            # a tenant whose jobs run hotter than predicted reserves
+            # proportionally more, instead of starving its neighbours.
+            for i, q in enumerate(qs):
+                tenant = getattr(q, "tenant", "")
+                if not tenant:
+                    continue
+                times[i] *= self.tenant_calibration.inflation(tenant, "time")
+                mems[i] *= self.tenant_calibration.inflation(tenant, "mem")
         jobs = jobs_from_estimates(
-            names, [e["time_s"] for e in ests],
-            [e["memory_bytes"] for e in ests],
+            names, times, mems,
             time_scale=self.time_scale, mem_pad=self.mem_pad)
         with self._lock:
             # reject jobs no machine can host at current residual HBM —
@@ -188,24 +213,37 @@ class AdmissionController:
         observation — joined with the prediction that admitted the job
         and the generation that made it — feeds the online refit loop.
         Returns a small completion summary (predicted vs measured, raw
-        domain).
+        domain). Idempotent: a duplicate report (a retried caller whose
+        first call already landed) returns the cached summary without
+        releasing the reservation a second time; a job this controller
+        never admitted still raises ``KeyError``.
         """
         with self._lock:
             if job_id not in self._resident:
+                cached = self._completed.get(job_id)
+                if cached is not None:
+                    return dict(cached)
                 raise KeyError(f"unknown or already-completed job {job_id!r}")
             k, job, query, est = self._resident.pop(job_id)
             self._busy[k] = max(0.0, self._busy[k]
                                 - job.time_s / self.machines[k].speed)
             self._reserved[k] = max(0.0, self._reserved[k] - job.mem_bytes)
             self._c_completions.inc()
-        raw_t = None if time_s is None else float(time_s) / self.time_scale
-        raw_m = (None if mem_bytes is None
-                 else max(0.0, float(mem_bytes) - self.mem_pad))
-        summary = {"job_id": job_id, "machine": self.machines[k].name,
-                   "predicted_time_s": est["time_s"],
-                   "predicted_mem_bytes": est["memory_bytes"],
-                   "measured_time_s": raw_t, "measured_mem_bytes": raw_m,
-                   "generation": est.get("generation"), "observed": False}
+            raw_t = (None if time_s is None
+                     else float(time_s) / self.time_scale)
+            raw_m = (None if mem_bytes is None
+                     else max(0.0, float(mem_bytes) - self.mem_pad))
+            summary = {"job_id": job_id, "machine": self.machines[k].name,
+                       "predicted_time_s": est["time_s"],
+                       "predicted_mem_bytes": est["memory_bytes"],
+                       "measured_time_s": raw_t, "measured_mem_bytes": raw_m,
+                       "generation": est.get("generation"), "observed": False}
+            # cache the summary before dropping the lock: a concurrent
+            # duplicate must either pop the reservation (it can't — we
+            # just did) or find the cache populated.
+            self._completed[job_id] = summary
+            while len(self._completed) > self.COMPLETED_CACHE:
+                self._completed.popitem(last=False)
         observe = getattr(self.predictor, "observe", None)
         # non-positive normalized measurements (e.g. measured mem below
         # mem_pad) carry no calibration signal and would poison the
@@ -213,12 +251,16 @@ class AdmissionController:
         # reservation but do not observe.
         if (observe is not None and raw_t is not None and raw_m is not None
                 and raw_t > 0.0 and raw_m > 0.0):
+            kw = {}
+            tenant = getattr(query, "tenant", "")
+            if tenant:
+                kw["tenant"] = tenant
             observe(query.cfg, query.batch, query.seq, raw_t, raw_m,
                     predicted_time_s=est["time_s"],
                     predicted_mem_bytes=est["memory_bytes"],
-                    generation=est.get("generation"), job_id=job_id)
+                    generation=est.get("generation"), job_id=job_id, **kw)
             summary["observed"] = True
-        return summary
+        return dict(summary)
 
     # -- introspection ------------------------------------------------------
     def cluster_state(self) -> Dict:

@@ -65,7 +65,8 @@ from repro.serve.feedback_store import FeedbackStore
 from repro.serve.prediction_service import (PredictionService, Query,
                                             config_fingerprint, trace_query)
 from repro.serve.refit import OnlineRefitter
-from repro.serve.server import AbacusServer, ServerStats
+from repro.serve.server import (AbacusServer, DeadlineExceeded, QuotaExceeded,
+                                ServerStats, _results_by_deadline)
 from repro.serve.trace_store import TraceStore
 
 
@@ -429,6 +430,18 @@ class ClusterFrontend:
         self.retired_stats = CounterDict(
             self.metrics, "fleet_retired_",
             tuple(c for c in ServerStats.COUNTERS if c != "max_batch"))
+        # overload ledgers live in their own CounterDicts: the
+        # reshard_stats/retired_stats key sets are a frozen wire shape
+        # (PR 7), so new series go in beside them, never inside them.
+        # `replay_expired` counts parked queries whose deadline passed
+        # before a cutover replay (expired work never hits the new ring);
+        # `retired_overload` banks a leaver's shed/expired/quota counters
+        # the same way retired_stats banks its ServerStats.
+        self.overload_stats = CounterDict(self.metrics, "fleet_",
+                                          ("replay_expired",))
+        self.retired_overload = CounterDict(
+            self.metrics, "fleet_retired_",
+            ("shed", "expired", "quota_rejected"))
         self.metrics.register_callback(
             lambda: {"fleet_replicas": len(self.replicas)})
         # failure handling for transport-backed replicas (repro.serve.rpc):
@@ -517,19 +530,22 @@ class ClusterFrontend:
                                f"{self.reshard_timeout}s; query not replayed")
 
     # -- client API ---------------------------------------------------------
-    def submit(self, cfg, batch: int, seq: int, trace: bool = False) -> Future:
+    def submit(self, cfg, batch: int, seq: int, trace: bool = False, *,
+               tenant: str = "", deadline: Optional[float] = None) -> Future:
         """Route one query to its shard; fingerprint computed ONCE here.
 
         ``trace=True`` opts the query into per-stage span recording: a
         trace context rides the query (across the RPC boundary for
         remote replicas), every stage stamps spans with one trace id,
         and ``trace_spans(fut.trace_id)`` returns the assembled trace
-        once the future resolves."""
+        once the future resolves. ``tenant``/``deadline`` ride the query
+        to the owning replica's admission ladder (quota, shed, EDF)."""
         fp = config_fingerprint(cfg)
         tc = new_context() if trace else None
         t0 = time.perf_counter() if trace else 0.0
         fut = self._submit_query(Query(cfg, int(batch), int(seq),
-                                       fp=fp, tc=tc))
+                                       fp=fp, tc=tc, tenant=tenant,
+                                       deadline=deadline))
         if tc is not None:
             # the root span: frontend accepted + routed the query
             self.span_sink.record(make_span(
@@ -553,14 +569,37 @@ class ClusterFrontend:
             return replica
         return None
 
+    def _expired_future(self, q: Query) -> Future:
+        """Failed Future for a parked query whose deadline passed before
+        its cutover replay: expired work is never replayed onto the new
+        ring, and the expiry is counted in ``fleet_replay_expired_total``
+        (it never reached a replica, so no server counter moves)."""
+        with self._route_lock:
+            self.overload_stats["replay_expired"] += 1
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        fut.set_exception(DeadlineExceeded(
+            f"deadline passed before replay of {q.fp!r} onto the new ring",
+            where="frontend"))
+        return fut
+
     def _submit_query(self, q: Query, avoid: frozenset = frozenset(),
-                      attempts: Optional[int] = None) -> Future:
+                      attempts: Optional[int] = None,
+                      replay: bool = False) -> Future:
         """Submit one routed query; transport-backed owners get a
         guarded Future (retry on replica death, optional hedging)."""
         attempts = self.max_retries if attempts is None else attempts
         deadline = time.monotonic() + self.reshard_timeout
         parked = False
         while True:
+            # first-pass submits always reach the owning replica (the
+            # server's tick expires dead work with exact accounting);
+            # only a REPLAY — post-cutover wake or a retry re-route —
+            # checks the deadline here, so an expired query is never
+            # replayed onto the new ring.
+            if ((parked or replay) and q.deadline is not None
+                    and time.monotonic() >= q.deadline):
+                return self._expired_future(q)
             with self._route_lock:
                 epoch = self._epoch
                 replica = self._pick_owner(q.fp, avoid)
@@ -568,17 +607,28 @@ class ClusterFrontend:
                     raise ReplicaUnavailable(
                         f"no live replica owns {q.fp!r} "
                         f"(avoided={sorted(avoid)})")
+                kw = {}
+                if q.tenant:
+                    kw["tenant"] = q.tenant
+                if q.deadline is not None:
+                    kw["deadline"] = q.deadline
                 try:
                     if q.tc is None:
-                        fut = replica.submit(q.cfg, q.batch, q.seq, fp=q.fp)
+                        fut = replica.submit(q.cfg, q.batch, q.seq,
+                                             fp=q.fp, **kw)
                     else:
                         fut = replica.submit(q.cfg, q.batch, q.seq,
-                                             fp=q.fp, tc=q.tc)
+                                             fp=q.fp, tc=q.tc, **kw)
                 except ReplicaUnavailable:
                     # owner died between the dead-check and the send:
                     # fall through to its ring successor immediately
                     avoid = avoid | {replica.name}
                     continue
+                except (QuotaExceeded, DeadlineExceeded):
+                    # RuntimeError subclasses, but NOT cutover races:
+                    # quota/deadline rejections surface to the caller
+                    # instead of parking for a replay
+                    raise
                 except RuntimeError:
                     if not self._resharding:
                         raise  # genuinely stopped, not a racing cutover
@@ -668,7 +718,7 @@ class ClusterFrontend:
                     q.tc["trace"], "retry", 0.0, parent=q.tc["span"],
                     avoided=sorted(avoid)))
             inner = self._submit_query(q, avoid=frozenset(avoid),
-                                       attempts=attempts)
+                                       attempts=attempts, replay=True)
         except Exception as e:
             _first_wins(out, error=e)
             return
@@ -720,6 +770,26 @@ class ClusterFrontend:
         singles: List[int] = []    # rerouted one-by-one around a dead owner
         deadline = time.monotonic() + self.reshard_timeout
         while pending:
+            # parked entries woken by a cutover are REPLAYS: expire the
+            # ones whose deadline already passed instead of replaying
+            # them onto the new ring (they also leave `parked`, keeping
+            # keys_replayed exact).
+            if parked:
+                now = time.monotonic()
+                live = []
+                for i in pending:
+                    if (i in parked and qs[i].deadline is not None
+                            and qs[i].deadline <= now):
+                        parked.discard(i)
+                        futs[i] = self._expired_future(qs[i])
+                    else:
+                        live.append(i)
+                pending = live
+                if not pending:
+                    with self._route_lock:
+                        if parked:
+                            self.reshard_stats["keys_replayed"] += len(parked)
+                    break
             with self._route_lock:
                 epoch = self._epoch
                 parts: Dict[str, List[int]] = {}
@@ -786,7 +856,9 @@ class ClusterFrontend:
 
     def predict_many(self, queries: Sequence,
                      timeout: Optional[float] = None) -> List[Dict]:
-        return [f.result(timeout) for f in self.submit_many(queries)]
+        # one SHARED deadline across the wave (not timeout-per-future,
+        # which compounds to N x timeout worst case)
+        return _results_by_deadline(self.submit_many(queries), timeout)
 
     # -- live resharding ----------------------------------------------------
     def add_replica(self, replica) -> Dict:
@@ -1018,6 +1090,21 @@ class ClusterFrontend:
             retiring = {r.name: {c: int(getattr(r.stats, c, 0) or 0)
                                  for c in self.retired_stats}
                         for r in affected if r.name not in names}
+            # same banking for the overload ledger: a leaver's shed/
+            # expired/quota counters are final once quiesced (a dead
+            # remote falls back to its cached snapshot; no counters at
+            # all banks zeros).
+            retiring_overload: Dict[str, Dict] = {}
+            for r in affected:
+                if r.name in names:
+                    continue
+                fn = getattr(r, "overload_counters", None)
+                if fn is None:
+                    continue
+                try:
+                    retiring_overload[r.name] = dict(fn())
+                except Exception:
+                    retiring_overload[r.name] = {}
             # 2) migrate: hand exactly the moved slices to the new owners
             owners = {**self._by_name, **joiners}
             for src in affected:
@@ -1065,6 +1152,10 @@ class ClusterFrontend:
         for counters in retiring.values():
             for c, v in counters.items():
                 self.retired_stats[c] += v
+        for counters in retiring_overload.values():
+            for c, v in counters.items():
+                if c in self.retired_overload:  # cached dicts may carry
+                    self.retired_overload[c] += int(v or 0)  # e.g. "stale"
         summary["retired"] = sorted(retiring)
         events.emit("reshard", members_from=summary["from"],
                     members_to=summary["to"],
@@ -1239,6 +1330,16 @@ class ClusterFrontend:
             "per_replica": per,
             "stale_replicas": sorted(name for name, p in per.items()
                                      if p.get("stale")),
+            # NEW key (stats() compat): all-time overload accounting is
+            # fleet (live members) + retired (banked leavers) + frontend
+            # (replay expiries that never reached a replica).
+            "overload": {
+                "fleet": {k: sum(int((p.get("overload") or {}).get(k, 0)
+                                     or 0) for p in per.values())
+                          for k in ("shed", "expired", "quota_rejected")},
+                "retired": dict(self.retired_overload),
+                "frontend": dict(self.overload_stats),
+            },
         }
         if self.refitter is not None:
             out["refit"] = self.refitter.info()

@@ -41,7 +41,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 from repro.serve.kvstore import SCHEMA_VERSION, JsonFileStore, StoreKey
 
 __all__ = ["Observation", "observation_id", "FeedbackStats", "FeedbackStore",
-           "CalibrationWindow", "StoreKey", "SCHEMA_VERSION"]
+           "CalibrationWindow", "TenantCalibration", "StoreKey",
+           "SCHEMA_VERSION"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -354,3 +355,73 @@ class CalibrationWindow:
     def reset(self) -> None:
         with self._lock:
             self._obs.clear()
+
+
+class TenantCalibration:
+    """Per-tenant :class:`CalibrationWindow` family, keyed by job owner.
+
+    Admission inflates a tenant's reservations by that tenant's own
+    observed drift (a tenant whose jobs consistently run 30% hotter than
+    predicted reserves 30% more), instead of letting one noisy tenant
+    skew the shared window. Untenanted observations (``tenant == ""``)
+    still land in the shared ``CalibrationWindow`` owned by the server;
+    this class only tracks named tenants.
+    """
+
+    def __init__(self, window: int = 256):
+        self.window = int(window)
+        self._tenants: Dict[str, CalibrationWindow] = {}
+        self._lock = threading.Lock()
+
+    def window_for(self, tenant: str) -> CalibrationWindow:
+        with self._lock:
+            win = self._tenants.get(tenant)
+            if win is None:
+                win = self._tenants[tenant] = CalibrationWindow(self.window)
+            return win
+
+    def observe(self, tenant: str, pred_time_s: float, obs_time_s: float,
+                pred_mem_bytes: float, obs_mem_bytes: float,
+                generation: Optional[int] = None) -> None:
+        if not tenant:
+            return
+        self.window_for(tenant).observe(pred_time_s, obs_time_s,
+                                        pred_mem_bytes, obs_mem_bytes,
+                                        generation=generation)
+
+    def inflation(self, tenant: str, kind: str = "time", *,
+                  cap: float = 2.0, min_count: int = 8) -> float:
+        """Reservation multiplier from the tenant's observed drift.
+
+        Drift is ``mean((pred - obs) / obs)``; negative means the
+        predictor underestimates this tenant, so reservations scale by
+        ``1 / (1 + drift)`` (clamped to ``[1.0, cap]``). Overestimating
+        tenants are left alone — admission never shrinks a reservation
+        below the prediction. Fewer than ``min_count`` observations is
+        no evidence: multiplier 1.0.
+        """
+        if not tenant:
+            return 1.0
+        with self._lock:
+            win = self._tenants.get(tenant)
+        if win is None:
+            return 1.0
+        m = win.metrics()
+        if (m["count"] or 0) < min_count:
+            return 1.0
+        drift = m.get(f"{kind}_drift")
+        if drift is None or drift >= 0.0:
+            return 1.0
+        denom = 1.0 + drift
+        if denom <= 0.0:
+            return float(cap)
+        return float(min(cap, max(1.0, 1.0 / denom)))
+
+    def metrics(self) -> Dict[str, Dict]:
+        with self._lock:
+            tenants = dict(self._tenants)
+        return {t: win.metrics() for t, win in sorted(tenants.items())}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._tenants.clear()

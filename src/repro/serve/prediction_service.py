@@ -53,12 +53,20 @@ class Query:
     (``{"trace": id, "span": root}``, see :mod:`repro.obs.tracing`);
     it rides the query across process boundaries so every stage stamps
     spans into one coherent per-query trace.
+
+    ``tenant`` names the submitting job owner for per-tenant admission
+    quotas and tenant-keyed calibration; ``""`` means untenanted (the
+    default shared quota bucket). ``deadline`` is an absolute
+    ``time.monotonic()`` instant after which serving the query is wasted
+    work: the tick expires it with ``DeadlineExceeded`` instead.
     """
     cfg: Any  # ModelConfig
     batch: int
     seq: int
     fp: Optional[str] = None  # precomputed config fingerprint
     tc: Optional[Dict] = None  # trace context (repro.obs.tracing)
+    tenant: str = ""  # job owner for quotas + calibration ("" = shared)
+    deadline: Optional[float] = None  # absolute time.monotonic() deadline
 
     def key(self) -> Optional[CacheKey]:
         """Cache key when the fingerprint was precomputed, else None."""

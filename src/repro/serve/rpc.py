@@ -74,7 +74,8 @@ from repro.serve.cluster import (GatewayReplica, ReplicaNotRunning,
 from repro.serve.feedback_store import FeedbackStore
 from repro.serve.prediction_service import Query
 from repro.serve.refit import ModelGeneration
-from repro.serve.server import ServerStats
+from repro.serve.server import (DeadlineExceeded, QuotaExceeded,
+                                ServerStats)
 from repro.serve.trace_store import TraceStore
 
 MAX_FRAME = 64 << 20  # one serialized DNNAbacus generation fits with room
@@ -313,9 +314,19 @@ class ReplicaServer:
                 # "tc" carries the frontend's trace context across the
                 # process boundary; the gateway's tick stamps spans and
                 # ships them back inside the estimate ("_trace").
+                # Deadlines cross as a *remaining budget* ("deadline_in",
+                # seconds) because monotonic clocks don't compare across
+                # processes; the absolute deadline is rebuilt here.
+                kw = {}
+                if msg.get("tenant"):
+                    kw["tenant"] = str(msg["tenant"])
+                if msg.get("deadline_in") is not None:
+                    kw["deadline"] = (time.monotonic()
+                                      + float(msg["deadline_in"]))
                 fut = replica.submit(decode_config(msg["cfg"]),
                                      msg["batch"], msg["seq"],
-                                     fp=msg.get("fp"), tc=msg.get("tc"))
+                                     fp=msg.get("fp"), tc=msg.get("tc"),
+                                     **kw)
 
                 def relay(f: Future, mid=mid) -> None:
                     # worker thread -> event loop: schedule the reply
@@ -323,9 +334,15 @@ class ReplicaServer:
                         payload = {"id": mid, "ok": True,
                                    "result": f.result()}
                     except Exception as e:
+                        if isinstance(e, DeadlineExceeded):
+                            kind = "deadline"
+                        elif isinstance(e, QuotaExceeded):
+                            kind = "quota"
+                        else:
+                            kind = "query"
                         payload = {"id": mid, "ok": False,
                                    "error": f"{type(e).__name__}: {e}",
-                                   "kind": "query"}
+                                   "kind": kind}
                     asyncio.run_coroutine_threadsafe(send(payload), loop)
 
                 fut.add_done_callback(relay)
@@ -348,7 +365,8 @@ class ReplicaServer:
                         predicted_time_s=m.get("predicted_time_s"),
                         predicted_mem_bytes=m.get("predicted_mem_bytes"),
                         generation=m.get("generation"),
-                        job_id=m.get("job_id", ""), fp=m.get("fp"))
+                        job_id=m.get("job_id", ""), fp=m.get("fp"),
+                        tenant=m.get("tenant", ""))
 
                 await loop.run_in_executor(None, _observe)
                 result = True
@@ -367,6 +385,8 @@ class ReplicaServer:
                 result = await loop.run_in_executor(None, replica.stats)
             elif op == "counters":
                 result = replica.stats.as_dict()
+            elif op == "overload":
+                result = replica.overload_counters()
             elif op == "metrics":
                 result = await loop.run_in_executor(
                     None, replica.metrics_snapshot)
@@ -390,9 +410,19 @@ class ReplicaServer:
                 raise ValueError(f"unknown op {op!r}")
             await send({"id": mid, "ok": True, "result": result})
         except Exception as e:
-            kind = ("not_running"
-                    if op in ("submit",) and isinstance(e, RuntimeError)
-                    and "not running" in str(e) else "error")
+            # overload raises are typed BEFORE the not_running string
+            # check: both subclass RuntimeError, and a quota rejection
+            # must never be mistaken for a drained replica (which the
+            # frontend would answer by re-routing the query).
+            if isinstance(e, QuotaExceeded):
+                kind = "quota"
+            elif isinstance(e, DeadlineExceeded):
+                kind = "deadline"
+            elif (op in ("submit",) and isinstance(e, RuntimeError)
+                  and "not running" in str(e)):
+                kind = "not_running"
+            else:
+                kind = "error"
             try:
                 await send({"id": mid, "ok": False,
                             "error": f"{type(e).__name__}: {e}",
@@ -560,6 +590,7 @@ class RemoteReplica:
             self, TraceStore(trace_root) if trace_root else None)
         self.stats = _RemoteStats(self)
         self._counters_cache: Dict[str, int] = {}
+        self._overload_cache: Dict[str, int] = {}
         self._cache_at: Optional[float] = None  # monotonic age of the cache
         self._closing = False
         self._dead_fired = False
@@ -632,6 +663,10 @@ class RemoteReplica:
                     _resolve(fut, msg.get("result"))
                 elif msg.get("kind") == "not_running":
                     _fail(fut, ReplicaNotRunning(msg.get("error", "")))
+                elif msg.get("kind") == "deadline":
+                    _fail(fut, DeadlineExceeded(msg.get("error", "")))
+                elif msg.get("kind") == "quota":
+                    _fail(fut, QuotaExceeded(msg.get("error", "")))
                 else:
                     _fail(fut, RPCError(msg.get("error", "")))
         except (OSError, ValueError):
@@ -697,11 +732,19 @@ class RemoteReplica:
 
     # -- replica interface ---------------------------------------------------
     def submit(self, cfg, batch: int, seq: int,
-               fp: Optional[str] = None, tc=None) -> Future:
+               fp: Optional[str] = None, tc=None, *, tenant: str = "",
+               deadline: Optional[float] = None) -> Future:
         params = {"cfg": encode_config(cfg), "batch": int(batch),
                   "seq": int(seq), "fp": fp}
         if tc is not None:  # trace context crosses inside the frame header
             params["tc"] = tc
+        if tenant:
+            params["tenant"] = str(tenant)
+        if deadline is not None:
+            # monotonic clocks don't compare across processes: ship the
+            # remaining budget, the server re-anchors it on its clock.
+            params["deadline_in"] = max(0.0,
+                                        float(deadline) - time.monotonic())
         return self._request("submit", params, self.submit_timeout)
 
     def submit_many(self, queries: Sequence) -> List[Future]:
@@ -710,7 +753,10 @@ class RemoteReplica:
         futs = []
         for q in queries:
             q = q if isinstance(q, Query) else Query(*q)
-            futs.append(self.submit(q.cfg, q.batch, q.seq, fp=q.fp, tc=q.tc))
+            futs.append(self.submit(
+                q.cfg, q.batch, q.seq, fp=q.fp, tc=q.tc,
+                tenant=getattr(q, "tenant", ""),
+                deadline=getattr(q, "deadline", None)))
         return futs
 
     def predict_one(self, cfg, batch: int, seq: int,
@@ -722,14 +768,17 @@ class RemoteReplica:
                 predicted_time_s: Optional[float] = None,
                 predicted_mem_bytes: Optional[float] = None,
                 generation: Optional[int] = None, job_id: str = "",
-                fp: Optional[str] = None) -> None:
-        self._call("observe", {
+                fp: Optional[str] = None, tenant: str = "") -> None:
+        params = {
             "cfg": encode_config(cfg), "batch": int(batch),
             "seq": int(seq), "time_s": float(time_s),
             "mem_bytes": float(mem_bytes),
             "predicted_time_s": predicted_time_s,
             "predicted_mem_bytes": predicted_mem_bytes,
-            "generation": generation, "job_id": str(job_id), "fp": fp})
+            "generation": generation, "job_id": str(job_id), "fp": fp}
+        if tenant:
+            params["tenant"] = str(tenant)
+        self._call("observe", params)
 
     def publish_generation(self, gen) -> bool:
         to_dict = getattr(gen.abacus, "to_dict", None)
@@ -750,6 +799,16 @@ class RemoteReplica:
             return dict(self._counters_cache)
         self._counters_cache = dict(c)
         self._cache_at = time.monotonic()
+        return c
+
+    def overload_counters(self) -> Dict[str, int]:
+        """Remote shed/expired/quota counters; last-known values once
+        dead, so the exclusion reshard can still bank them."""
+        try:
+            c = self._call("overload")
+        except ReplicaUnavailable:
+            return dict(self._overload_cache)
+        self._overload_cache = dict(c)
         return c
 
     def _full_stats(self) -> Dict:
@@ -871,6 +930,8 @@ def spawn_replica(name: str, predictor_path: str, *,
                   startup_timeout: float = 60.0,
                   python: Optional[str] = None,
                   event_log: Optional[str] = None,
+                  max_queue: Optional[int] = None,
+                  shed_watermark: Optional[int] = None,
                   **remote_kw) -> RemoteReplica:
     """Spawn ``python -m repro.serve.rpc`` and connect a stub to it.
 
@@ -891,6 +952,10 @@ def spawn_replica(name: str, predictor_path: str, *,
         cmd += ["--tracer", tracer]
     if event_log:
         cmd += ["--event-log", str(event_log)]
+    if max_queue is not None:
+        cmd += ["--max-queue", str(max_queue)]
+    if shed_watermark is not None:
+        cmd += ["--shed-watermark", str(shed_watermark)]
     env = dict(os.environ)
     env["PYTHONPATH"] = _src_dir() + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
@@ -981,6 +1046,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="module:attr of the tracer callable")
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--trace-workers", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the pending queue; per-tenant weighted-"
+                         "fair shares of it gate admission")
+    ap.add_argument("--shed-watermark", type=int, default=None,
+                    help="queue depth past which submits are answered "
+                         "from the roofline floor (degraded)")
     ap.add_argument("--event-log", default=None,
                     help="JSONL file for this replica's lifecycle events "
                          "(gen swaps etc.); safe to share across a fleet "
@@ -989,13 +1060,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     if args.event_log:
         events.configure(path=args.event_log)
+    server_kw = {}
+    if args.max_queue is not None:
+        server_kw["max_queue"] = args.max_queue
+    if args.shed_watermark is not None:
+        server_kw["shed_watermark"] = args.shed_watermark
     replica = GatewayReplica(
         args.name, DNNAbacus.load(args.predictor),
         store=TraceStore(args.trace_store) if args.trace_store else None,
         feedback=(FeedbackStore(args.feedback_store)
                   if args.feedback_store else None),
         tracer=resolve_tracer(args.tracer), max_batch=args.max_batch,
-        trace_workers=args.trace_workers)
+        trace_workers=args.trace_workers, **server_kw)
     replica.start()
     server = ReplicaServer(replica, host=args.host, port=args.port)
 

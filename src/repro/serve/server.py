@@ -24,17 +24,67 @@ trace concurrently instead of serially inside ``predict_many``.
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis.roofline import floor_estimate
 from repro.obs import events
-from repro.obs.metrics import MetricsRegistry, merge_snapshots
+from repro.obs.metrics import CounterDict, MetricsRegistry, merge_snapshots
 from repro.obs.tracing import SpanSink, make_span
-from repro.serve.feedback_store import CalibrationWindow
+from repro.serve.feedback_store import CalibrationWindow, TenantCalibration
 from repro.serve.prediction_service import PredictionService, Query
+
+
+class DeadlineExceeded(RuntimeError):
+    """The query's deadline passed before it could be served.
+
+    ``where`` records which stage expired it: ``"server"`` when the
+    serving tick found it already dead, ``"frontend"`` when a cluster
+    frontend expired a parked query before replaying it onto a new ring
+    (expired work is never replayed).
+    """
+
+    def __init__(self, msg: str, where: str = "server"):
+        super().__init__(msg)
+        self.where = where
+
+
+class QuotaExceeded(RuntimeError):
+    """The tenant's weighted-fair share of the queue is exhausted."""
+
+    def __init__(self, msg: str, tenant: str = ""):
+        super().__init__(msg)
+        self.tenant = tenant
+
+
+def _results_by_deadline(futs: Sequence[Future],
+                         timeout: Optional[float]) -> List:
+    """Collect ``fut.result()``s under ONE shared deadline.
+
+    ``[f.result(timeout) for f in futs]`` compounds the timeout per
+    future (N futures can wait up to N x timeout total); this converts
+    ``timeout`` into a single absolute deadline and gives each future
+    only what remains of it, raising the builtin ``TimeoutError`` naming
+    how many futures were still pending.
+    """
+    if timeout is None:
+        return [f.result() for f in futs]
+    deadline = time.monotonic() + float(timeout)
+    out = []
+    for i, f in enumerate(futs):
+        try:
+            out.append(f.result(max(0.0, deadline - time.monotonic())))
+        except FutureTimeout:
+            pending = sum(1 for g in futs[i:] if not g.done())
+            raise TimeoutError(
+                f"predict_many deadline of {timeout}s exhausted with "
+                f"{pending} of {len(futs)} futures still pending") from None
+    return out
 
 
 class ServerStats:
@@ -122,10 +172,21 @@ class AbacusServer:
     def __init__(self, service: PredictionService, max_batch: int = 256,
                  trace_workers: int = 4, feedback=None, refitter=None,
                  calibration_window: int = 256,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 max_queue: Optional[int] = None,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 shed_watermark: Optional[int] = None):
         self.service = service
         self.max_batch = int(max_batch)
         self.trace_workers = int(trace_workers)
+        # overload controls (None = unbounded, the legacy behaviour):
+        # `max_queue` bounds the queue with weighted-fair per-tenant
+        # shares; `shed_watermark` is the saturation depth past which
+        # new submits are answered from the zero-trace roofline floor.
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.shed_watermark = (None if shed_watermark is None
+                               else int(shed_watermark))
+        self.tenant_weights: Dict[str, float] = dict(tenant_weights or {})
         # merged into every estimate this server resolves: a cluster
         # replica stamps {"replica": name} so fleet-level tests and
         # clients can attribute (tick, generation) pairs per replica.
@@ -163,9 +224,16 @@ class AbacusServer:
         # the refitter publishes new generations back through us.
         self.feedback = feedback      # FeedbackStore or None
         self.calibration = CalibrationWindow(window=calibration_window)
+        self.tenant_calibration = TenantCalibration(window=calibration_window)
         self.refitter = refitter      # OnlineRefitter or None
         if refitter is not None:
             refitter.add_sink(self)
+        # overload accounting: NEW metric series (server_shed_total, ...)
+        # next to the legacy ServerStats counters, never replacing them.
+        # Mutated under self._cond like every other counter here.
+        self.overload = CounterDict(self.metrics, "server_",
+                                    ("shed", "expired", "quota_rejected"))
+        self._tenant_queued: Dict[str, int] = {}
         self._queue: Deque[Tuple[Query, Future]] = deque()
         self._cond = threading.Condition()
         self._pending_gen = None      # generation awaiting a tick boundary
@@ -217,6 +285,7 @@ class AbacusServer:
         # anything still queued after the drain tick fails loudly
         with self._cond:
             leftovers, self._queue = list(self._queue), deque()
+            self._tenant_queued.clear()
         for _, fut in leftovers:
             if not fut.done():
                 try:
@@ -248,8 +317,39 @@ class AbacusServer:
                 and not self._running)
 
     # -- client API ---------------------------------------------------------
+    def _quota_exceeded_locked(self, tenant: str) -> bool:
+        """Weighted-fair share check; callers hold ``self._cond``.
+
+        A tenant's share of ``max_queue`` is its weight over the total
+        weight of tenants with queued work (plus itself): an idle fleet
+        lets one tenant use the whole queue, contention splits it by
+        weight, and every tenant keeps a floor of one slot.
+        """
+        if self.max_queue is None:
+            return False
+        queued = self._tenant_queued.get(tenant, 0)
+        active = set(self._tenant_queued)
+        active.add(tenant)
+        w = float(self.tenant_weights.get(tenant, 1.0))
+        w_active = sum(float(self.tenant_weights.get(t, 1.0))
+                       for t in active)
+        cap = max(1, math.ceil(self.max_queue * w / w_active))
+        return queued >= cap
+
+    def _shed_estimate(self, q: Query) -> Dict:
+        """Roofline-floor answer for a query shed past the watermark."""
+        est = floor_estimate(q.cfg, q.batch, q.seq)
+        hbm = getattr(self.service, "hbm_budget", None)
+        est["hbm_budget"] = hbm
+        est["admitted"] = (est["memory_bytes"] <= hbm if hbm is not None
+                           else True)
+        est["generation"] = self.service.generation
+        est.update(self.est_tags)
+        return est
+
     def submit(self, cfg, batch: int, seq: int,
-               fp: Optional[str] = None, tc=None) -> Future:
+               fp: Optional[str] = None, tc=None, *, tenant: str = "",
+               deadline: Optional[float] = None) -> Future:
         """Enqueue one admission query; resolves to the estimate dict.
 
         ``fp`` optionally carries the config fingerprint a router
@@ -258,18 +358,43 @@ class AbacusServer:
         :mod:`repro.obs.tracing`): the serving tick then records spans
         for this query and ships them back inside the estimate under
         ``"_trace"``.
+
+        Overload ladder (each stage only when configured): a tenant past
+        its weighted-fair queue share is rejected synchronously with
+        :class:`QuotaExceeded`; a queue past ``shed_watermark`` answers
+        immediately from the roofline floor (``degraded: True``); a
+        queued query whose ``deadline`` (absolute ``time.monotonic()``)
+        passes before its tick fails with :class:`DeadlineExceeded`.
         """
         fut: Future = Future()
         if self.metrics.enabled:
             fut._obs_t0 = time.perf_counter()
-        q = Query(cfg, int(batch), int(seq), fp=fp, tc=tc)
+        q = Query(cfg, int(batch), int(seq), fp=fp, tc=tc,
+                  tenant=tenant, deadline=deadline)
+        shed = False
         with self._cond:
             if not self._running:
                 raise RuntimeError("AbacusServer is not running "
                                    "(use `with AbacusServer(...)` or start())")
-            self._queue.append((q, fut))
-            self.stats.submitted += 1
-            self._cond.notify()
+            if self._quota_exceeded_locked(q.tenant):
+                self.overload["quota_rejected"] += 1
+                raise QuotaExceeded(
+                    f"tenant {q.tenant!r} queue quota exhausted",
+                    tenant=q.tenant)
+            if (self.shed_watermark is not None
+                    and len(self._queue) >= self.shed_watermark):
+                self.stats.submitted += 1
+                self.stats.completed += 1
+                self.overload["shed"] += 1
+                shed = True
+            else:
+                self._queue.append((q, fut))
+                self._tenant_queued[q.tenant] = \
+                    self._tenant_queued.get(q.tenant, 0) + 1
+                self.stats.submitted += 1
+                self._cond.notify()
+        if shed:
+            fut.set_result(self._shed_estimate(q))
         return fut
 
     def submit_many(self, queries: Sequence) -> List[Future]:
@@ -279,13 +404,36 @@ class AbacusServer:
             t0 = time.perf_counter()  # one clock read for the whole wave
             for fut in futs:
                 fut._obs_t0 = t0
+        shed_idx: List[int] = []
+        quota_idx: List[int] = []
         with self._cond:
             if not self._running:
                 raise RuntimeError("AbacusServer is not running "
                                    "(use `with AbacusServer(...)` or start())")
-            self._queue.extend(zip(qs, futs))
-            self.stats.submitted += len(qs)
+            for i, (q, fut) in enumerate(zip(qs, futs)):
+                if self._quota_exceeded_locked(q.tenant):
+                    # batch submits report quota per-future instead of
+                    # failing the whole wave synchronously
+                    self.overload["quota_rejected"] += 1
+                    quota_idx.append(i)
+                elif (self.shed_watermark is not None
+                        and len(self._queue) >= self.shed_watermark):
+                    self.stats.submitted += 1
+                    self.stats.completed += 1
+                    self.overload["shed"] += 1
+                    shed_idx.append(i)
+                else:
+                    self._queue.append((q, fut))
+                    self._tenant_queued[q.tenant] = \
+                        self._tenant_queued.get(q.tenant, 0) + 1
+                    self.stats.submitted += 1
             self._cond.notify()
+        for i in quota_idx:
+            futs[i].set_exception(QuotaExceeded(
+                f"tenant {qs[i].tenant!r} queue quota exhausted",
+                tenant=qs[i].tenant))
+        for i in shed_idx:
+            futs[i].set_result(self._shed_estimate(qs[i]))
         return futs
 
     def predict_one(self, cfg, batch: int, seq: int,
@@ -295,7 +443,7 @@ class AbacusServer:
 
     def predict_many(self, queries: Sequence,
                      timeout: Optional[float] = None) -> List[Dict]:
-        return [f.result(timeout) for f in self.submit_many(queries)]
+        return _results_by_deadline(self.submit_many(queries), timeout)
 
     # -- model generations --------------------------------------------------
     def publish_generation(self, gen) -> bool:
@@ -342,7 +490,7 @@ class AbacusServer:
                 mem_bytes: float, *, predicted_time_s: Optional[float] = None,
                 predicted_mem_bytes: Optional[float] = None,
                 generation: Optional[int] = None, job_id: str = "",
-                fp: Optional[str] = None) -> None:
+                fp: Optional[str] = None, tenant: str = "") -> None:
         """Report one finished job's measured cost.
 
         Feeds the rolling calibration window (when the prediction that
@@ -360,6 +508,10 @@ class AbacusServer:
             self.calibration.observe(predicted_time_s, time_s,
                                      predicted_mem_bytes, mem_bytes,
                                      generation)
+            if tenant:
+                self.tenant_calibration.observe(
+                    tenant, predicted_time_s, time_s,
+                    predicted_mem_bytes, mem_bytes, generation=generation)
         if self.feedback is not None:
             key = ((fp, int(batch), int(seq)) if fp is not None
                    else self.service.cache_key(cfg, batch, seq))
@@ -369,6 +521,64 @@ class AbacusServer:
             self.refitter.notify()
 
     # -- worker loop --------------------------------------------------------
+    def _tenant_dec_locked(self, tenant: str) -> None:
+        n = self._tenant_queued.get(tenant, 0) - 1
+        if n > 0:
+            self._tenant_queued[tenant] = n
+        else:
+            self._tenant_queued.pop(tenant, None)
+
+    def _take_batch_locked(self) -> Tuple[List[Tuple[Query, Future]],
+                                          List[Tuple[Query, Future]]]:
+        """Next tick's batch (EDF order) + already-expired entries.
+
+        Callers hold ``self._cond``. Deadline-free workloads skip the
+        scan entirely and keep the legacy FIFO popleft. With deadlines
+        present, past-deadline entries are pulled out for expiry and the
+        rest are stably sorted earliest-deadline-first (deadline-less
+        queries sort last, FIFO preserved within every tie class).
+        """
+        if not any(q.deadline is not None for q, _ in self._queue):
+            batch = [self._queue.popleft()
+                     for _ in range(min(len(self._queue), self.max_batch))]
+            for q, _ in batch:
+                self._tenant_dec_locked(q.tenant)
+            return batch, []
+        now = time.monotonic()
+        expired: List[Tuple[Query, Future]] = []
+        pending: List[Tuple[Query, Future]] = []
+        for item in self._queue:
+            q, _ = item
+            if q.deadline is not None and q.deadline <= now:
+                expired.append(item)
+            else:
+                pending.append(item)
+        pending.sort(key=lambda e: (e[0].deadline is None,
+                                    e[0].deadline or 0.0))
+        batch, rest = pending[:self.max_batch], pending[self.max_batch:]
+        self._queue = deque(rest)
+        for q, _ in expired:
+            self._tenant_dec_locked(q.tenant)
+        for q, _ in batch:
+            self._tenant_dec_locked(q.tenant)
+        return batch, expired
+
+    def _expire(self, expired: List[Tuple[Query, Future]]) -> None:
+        """Fail past-deadline futures with a structured DeadlineExceeded."""
+        now = time.monotonic()
+        for q, fut in expired:
+            if not fut.set_running_or_notify_cancel():
+                continue  # client cancelled it first
+            with self._cond:
+                self.stats.failed += 1
+                self.overload["expired"] += 1
+            try:
+                fut.set_exception(DeadlineExceeded(
+                    f"deadline passed {now - q.deadline:.4f}s before "
+                    f"serving (tenant {q.tenant!r})"))
+            except Exception:
+                pass
+
     def _loop(self) -> None:
         while True:
             with self._cond:
@@ -379,8 +589,9 @@ class AbacusServer:
                 if not self._queue:  # stopped and drained
                     self._apply_pending_locked()
                     return
-                batch = [self._queue.popleft()
-                         for _ in range(min(len(self._queue), self.max_batch))]
+                batch, expired = self._take_batch_locked()
+            if expired:
+                self._expire(expired)
             # client-cancelled futures drop out of the batch here; the
             # rest transition to RUNNING so cancel() can no longer race
             # our set_result below.
@@ -574,8 +785,19 @@ class AbacusServer:
         """
         d = self.server_info()
         d["calibration"] = self.calibration.metrics()
+        # NEW keys only (stats() compat, PR 7): shed/expired/quota
+        # accounting and per-tenant calibration land beside the legacy
+        # surface, never inside it.
+        d["overload"] = self.overload.as_dict()
+        d["tenants"] = self.tenant_calibration.metrics()
         if self.refitter is not None:
             d["refit"] = self.refitter.info()
         if self.feedback is not None:
             d["feedback"] = self.feedback.info()
         return d
+
+    def overload_counters(self) -> Dict[str, int]:
+        """Shed/expired/quota counters, in the replica-interface shape
+        the cluster frontend banks when a member retires."""
+        with self._cond:
+            return self.overload.as_dict()

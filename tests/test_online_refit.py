@@ -425,8 +425,14 @@ def test_report_completion_feeds_observation_with_prediction_context():
     v2 = ctl.admit([Query(_fake_cfg("a"), 4, 32)])[0]
     assert not ctl.report_completion(v2.job_id)["observed"]
     assert len(pred.observed) == 1
+    # duplicate report (a retried caller): cached summary, no
+    # double-release, no second observation
+    dup = ctl.report_completion(v.job_id)
+    assert dup["job_id"] == v.job_id and dup["observed"]
+    assert len(pred.observed) == 1
+    assert ctl.cluster_state()["resident_jobs"] == 0
     with pytest.raises(KeyError):
-        ctl.report_completion(v.job_id)          # already completed
+        ctl.report_completion("never-admitted")  # truly unknown job
 
 
 def test_report_completion_normalizes_verdict_domain_measurements():

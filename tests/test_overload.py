@@ -1,0 +1,401 @@
+"""Overload control plane: EDF deadlines, tenant quotas, shed-to-roofline.
+
+The tests pin the three overload behaviours and their accounting
+identities: (a) the serving tick orders pending work earliest-deadline
+-first and expires dead work with a structured ``DeadlineExceeded``
+instead of serving it; (b) per-tenant weighted-fair admission quotas
+reject synchronously with ``QuotaExceeded`` and count each rejection
+exactly once, even under thread contention; (c) past the shed
+watermark a replica answers from the zero-trace roofline floor with
+``degraded: true`` rather than queueing. Every path keeps the counter
+identity ``completed + failed == submitted`` intact (shed queries are
+submitted+completed, expired are submitted+failed, quota rejections
+never count as submitted at all).
+
+Workers are wedged deterministically with a gating tracer — a config
+named ``blocker*`` parks the tick inside its trace until released — so
+queue states are exact, not timing-dependent.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import Machine
+from repro.scenarios import (ScenarioRunner, check_all, failed, fit_abacus,
+                             generate, scenario_trace, tenant_overload_spec)
+from repro.scenarios.oracles import oracle_overload_accounting
+from repro.serve import (AbacusServer, AdmissionController, ClusterFrontend,
+                         DeadlineExceeded, PredictionService, Query,
+                         QuotaExceeded, TenantCalibration)
+from repro.serve.prediction_service import config_fingerprint
+
+from test_prediction_service import _abacus, _counting_tracer, _fake_cfg
+from test_server import _FixedPredictor, _est
+
+GIB = 2**30
+
+
+class _Gate:
+    """Tracer that wedges the worker inside any config named ``blocker*``."""
+
+    def __init__(self):
+        self.release = threading.Event()
+        self.started = threading.Event()
+        self._base = _counting_tracer([])
+
+    def __call__(self, cfg, batch, seq):
+        if getattr(cfg, "name", "").startswith("blocker"):
+            self.started.set()
+            self.release.wait(10.0)
+        return self._base(cfg, batch, seq)
+
+
+def _gated_server(**server_kw):
+    gate = _Gate()
+    srv = AbacusServer(PredictionService(_abacus(), tracer=gate),
+                       **server_kw).start()
+    return gate, srv
+
+
+def _wedge(gate, srv):
+    """Submit the blocker and wait until the worker is stuck inside it."""
+    fut = srv.submit(_fake_cfg("blocker"), 2, 32)
+    assert gate.started.wait(10.0), "worker never picked up the blocker"
+    return fut
+
+
+# -- EDF + deadline expiry ---------------------------------------------------
+
+
+def test_edf_orders_pending_work_by_deadline():
+    gate, srv = _gated_server(max_batch=1)
+    try:
+        _wedge(gate, srv)
+        now = time.monotonic()
+        # enqueued in anti-EDF order; deadline-free work goes last
+        late = srv.submit(_fake_cfg("late"), 2, 32, deadline=now + 60.0)
+        bare = srv.submit(_fake_cfg("bare"), 2, 32)
+        soon = srv.submit(_fake_cfg("soon"), 2, 32, deadline=now + 30.0)
+        gate.release.set()
+        ticks = {name: fut.result(10)["tick"]
+                 for name, fut in (("soon", soon), ("late", late),
+                                   ("bare", bare))}
+        assert ticks["soon"] < ticks["late"] < ticks["bare"]
+    finally:
+        gate.release.set()
+        srv.stop()
+
+
+def test_expired_query_fails_structured_and_is_counted():
+    gate, srv = _gated_server(max_batch=4)
+    try:
+        blocker = _wedge(gate, srv)
+        doomed = srv.submit(_fake_cfg("doomed"), 2, 32, tenant="slo",
+                            deadline=time.monotonic() + 0.05)
+        alive = srv.submit(_fake_cfg("alive"), 2, 32)
+        time.sleep(0.15)          # deadline lapses while queued
+        gate.release.set()
+        with pytest.raises(DeadlineExceeded) as ei:
+            doomed.result(10)
+        assert ei.value.where == "server"
+        assert "'slo'" in str(ei.value)
+        assert np.isfinite(alive.result(10)["time_s"])
+        assert np.isfinite(blocker.result(10)["time_s"])
+        assert srv.stats()["overload"] == {"shed": 0, "expired": 1,
+                                           "quota_rejected": 0}
+        # expired work is failed, never silently dropped
+        assert srv.stats.submitted == 3
+        assert srv.stats.completed == 2 and srv.stats.failed == 1
+    finally:
+        gate.release.set()
+        srv.stop()
+
+
+def test_predict_many_shared_deadline_not_compounded():
+    gate, srv = _gated_server(max_batch=1)
+    try:
+        _wedge(gate, srv)
+        queries = [(_fake_cfg(f"pm{i}"), 2, 32) for i in range(5)]
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError) as ei:
+            srv.predict_many(queries, timeout=0.4)
+        # ONE shared deadline: nowhere near the 5 x 0.4s compounding
+        # the old per-future timeout allowed
+        assert time.perf_counter() - t0 < 1.5
+        assert "5 of 5 futures still pending" in str(ei.value)
+    finally:
+        gate.release.set()
+        srv.stop()
+
+
+def test_cluster_predict_many_shared_deadline():
+    gate = _Gate()
+    fleet = ClusterFrontend(_abacus(), n_replicas=2, tracer=gate)
+    fleet.start()
+    try:
+        for r in fleet.replicas:  # wedge every replica's worker
+            r.submit(_fake_cfg(f"blocker-{r.name}"), 2, 32)
+        assert gate.started.wait(10.0)
+        queries = [(_fake_cfg(f"cpm{i}"), 2, 32) for i in range(4)]
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError) as ei:
+            fleet.predict_many(queries, timeout=0.4)
+        assert time.perf_counter() - t0 < 1.5
+        assert "4 of 4 futures still pending" in str(ei.value)
+    finally:
+        gate.release.set()
+        fleet.stop()
+
+
+# -- shed-to-roofline --------------------------------------------------------
+
+
+def test_shed_past_watermark_answers_roofline_floor():
+    gate, srv = _gated_server(max_batch=1, shed_watermark=2)
+    try:
+        _wedge(gate, srv)
+        q1 = srv.submit(_fake_cfg("q1"), 2, 32)
+        q2 = srv.submit(_fake_cfg("q2"), 2, 32)
+        shed = srv.submit(_fake_cfg("q3"), 2, 32)  # queue at watermark
+        # resolved at submit time, while the worker is still wedged
+        est = shed.result(1.0)
+        assert est["degraded"] is True
+        assert est["model"] == "roofline-floor"
+        assert est["time_s"] > 0 and est["memory_bytes"] > 0
+        assert est["flops"] > 0
+        assert "tick" not in est  # never reached a serving tick
+        assert srv.stats()["overload"]["shed"] == 1
+        gate.release.set()
+        for f in (q1, q2):
+            assert np.isfinite(f.result(10)["time_s"])
+    finally:
+        gate.release.set()
+        srv.stop()
+    # shed queries are submitted+completed: the identity holds
+    assert srv.stats.submitted == 4
+    assert srv.stats.completed == 4 and srv.stats.failed == 0
+
+
+# -- tenant quotas -----------------------------------------------------------
+
+
+def test_quota_weighted_fair_shares():
+    gate, srv = _gated_server(max_batch=1, max_queue=4,
+                              tenant_weights={"a": 3.0, "b": 1.0})
+    try:
+        _wedge(gate, srv)
+        # "a" alone holds the whole queue: cap = ceil(4 * 3/3) = 4
+        futs = [srv.submit(_fake_cfg(f"a{i}"), 2, 32, tenant="a")
+                for i in range(4)]
+        with pytest.raises(QuotaExceeded) as ei:
+            srv.submit(_fake_cfg("a4"), 2, 32, tenant="a")
+        assert ei.value.tenant == "a"
+        # "b" activates: shares re-weight, b gets ceil(4 * 1/4) = 1 slot
+        futs.append(srv.submit(_fake_cfg("b0"), 2, 32, tenant="b"))
+        with pytest.raises(QuotaExceeded):
+            srv.submit(_fake_cfg("b1"), 2, 32, tenant="b")
+        assert srv.stats()["overload"]["quota_rejected"] == 2
+        # rejected work never counts as submitted
+        assert srv.stats.submitted == 1 + 5
+        gate.release.set()
+        for f in futs:
+            assert np.isfinite(f.result(10)["time_s"])
+    finally:
+        gate.release.set()
+        srv.stop()
+
+
+def test_quota_rejections_counted_exactly_once_under_contention():
+    gate, srv = _gated_server(max_batch=1, max_queue=4)
+    try:
+        _wedge(gate, srv)
+        n_threads, per = 8, 50
+        barrier = threading.Barrier(n_threads)
+        lock = threading.Lock()
+        rejected = [0]
+        accepted = []
+
+        def hammer(idx):
+            barrier.wait()
+            for k in range(per):
+                try:
+                    fut = srv.submit(_fake_cfg(f"h{idx}-{k}"), 2, 32,
+                                     tenant="flood")
+                except QuotaExceeded:
+                    with lock:
+                        rejected[0] += 1
+                else:
+                    with lock:
+                        accepted.append(fut)
+
+        threads = [threading.Thread(target=hammer, args=(i,))
+                   for i in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(30)
+        assert not any(th.is_alive() for th in threads)
+        assert rejected[0] + len(accepted) == n_threads * per
+        # the counter agrees with the callers EXACTLY — no double counts,
+        # no lost rejections under the barrier-released stampede
+        assert srv.stats()["overload"]["quota_rejected"] == rejected[0]
+        # worker was wedged throughout: exactly the fair share got in
+        assert len(accepted) == 4
+        assert srv.stats.submitted == 1 + len(accepted)
+        gate.release.set()
+        for f in accepted:
+            assert np.isfinite(f.result(10)["time_s"])
+    finally:
+        gate.release.set()
+        srv.stop()
+
+
+# -- draining semantics ------------------------------------------------------
+
+
+def test_submit_during_drain_rejected_but_queued_work_still_served():
+    gate, srv = _gated_server(max_batch=1)
+    try:
+        _wedge(gate, srv)
+        queued = srv.submit(_fake_cfg("drainq"), 2, 32)
+        srv.stop(timeout=0.2)      # worker wedged: stop leaves it draining
+        assert srv.draining and not srv.running
+        with pytest.raises(RuntimeError):
+            srv.submit(_fake_cfg("rejected"), 2, 32)
+        gate.release.set()
+        # drain-then-stop: accepted work is still answered
+        assert np.isfinite(queued.result(10)["time_s"])
+    finally:
+        gate.release.set()
+        srv.stop()
+    assert not srv.draining
+
+
+# -- deadline expiry racing a reshard cutover --------------------------------
+
+
+def test_expired_parked_query_is_never_replayed_onto_new_ring():
+    fleet = ClusterFrontend(_abacus(), n_replicas=2,
+                            tracer=_counting_tracer([]))
+    fleet.start()
+    try:
+        cfg = next(c for c in (_fake_cfg(f"race{i}") for i in range(64))
+                   if fleet.ring.route(config_fingerprint(c)) == "r0")
+        owner, other = fleet._by_name["r0"], fleet._by_name["r1"]
+        owner.stop()               # owner refuses: submit parks on cutover
+        base_owner = owner.stats.submitted
+        base_other = other.stats.submitted
+        with fleet._route_lock:
+            fleet._resharding = True
+        holder = {}
+
+        def go():
+            holder["fut"] = fleet.submit(
+                cfg, 2, 32, deadline=time.monotonic() + 0.2)
+
+        t = threading.Thread(target=go)
+        t.start()
+        time.sleep(0.6)            # parked; its deadline lapses meanwhile
+        with fleet._route_lock:    # cutover completes, parked work wakes
+            fleet._resharding = False
+            fleet._epoch += 1
+            fleet._cutover.notify_all()
+        t.join(10)
+        assert not t.is_alive()
+        with pytest.raises(DeadlineExceeded) as ei:
+            holder["fut"].result(5)
+        assert ei.value.where == "frontend"
+        st = fleet.stats()
+        assert st["overload"]["frontend"]["replay_expired"] == 1
+        assert st["reshard"]["keys_replayed"] == 0   # never replayed
+        # the expired query reached NO replica — old owner or new
+        assert owner.stats.submitted == base_owner
+        assert other.stats.submitted == base_other
+    finally:
+        fleet.stop()
+
+
+# -- tenant calibration + admission inflation --------------------------------
+
+
+def test_tenant_inflation_semantics():
+    tc = TenantCalibration()
+    # fewer than min_count observations is no evidence
+    for _ in range(7):
+        tc.observe("hot", 1.0, 1.25, GIB, 1.25 * GIB)
+    assert tc.inflation("hot", "time") == 1.0
+    tc.observe("hot", 1.0, 1.25, GIB, 1.25 * GIB)
+    # drift -0.2 (runs 25% hotter than predicted) -> reserve 25% more
+    assert tc.inflation("hot", "time") == pytest.approx(1.25)
+    assert tc.inflation("hot", "mem") == pytest.approx(1.25)
+    # an overestimated tenant is never shrunk below its prediction
+    for _ in range(8):
+        tc.observe("cold", 2.0, 1.0, 2 * GIB, GIB)
+    assert tc.inflation("cold", "time") == 1.0
+    # runaway drift clamps at the cap
+    for _ in range(8):
+        tc.observe("wild", 1.0, 100.0, GIB, 100 * GIB)
+    assert tc.inflation("wild", "time") == 2.0
+    assert tc.inflation("wild", "time", cap=4.0) == 4.0
+    # unknown or untenanted: 1.0
+    assert tc.inflation("nobody") == 1.0
+    assert tc.inflation("") == 1.0
+
+
+def test_admission_inflates_reservations_by_tenant_drift():
+    tc = TenantCalibration()
+    for _ in range(8):  # "hot" runs 2x its time prediction; memory clean
+        tc.observe("hot", 1.0, 2.0, GIB, GIB)
+    pred = _FixedPredictor({"j": _est(10.0, 1.0)})
+    ctl = AdmissionController(pred, [Machine("m1", 8 * GIB)],
+                              plan="optimal", tenant_calibration=tc)
+    v_cold = ctl.admit([Query(_fake_cfg("j"), 2, 32)])[0]
+    v_hot = ctl.admit([Query(_fake_cfg("j"), 2, 32, tenant="hot")])[0]
+    assert v_cold.time_s == pytest.approx(10.0)
+    assert v_hot.time_s == pytest.approx(20.0)       # 2x time inflation
+    assert v_hot.mem_bytes == pytest.approx(1 * GIB)  # mem untouched
+
+
+def test_report_completion_idempotent_on_duplicate():
+    pred = _FixedPredictor({"j": _est(5.0, 1.0)})
+    ctl = AdmissionController(pred, [Machine("m1", 8 * GIB)], plan="optimal")
+    v = ctl.admit([Query(_fake_cfg("j"), 2, 32)])[0]
+    assert v.admitted
+    s1 = ctl.report_completion(v.job_id, time_s=6.0, mem_bytes=GIB)
+    assert ctl.cluster_state()["resident_jobs"] == 0
+    # a retried caller gets the cached summary, never a double-release
+    s2 = ctl.report_completion(v.job_id)
+    assert s2 == s1
+    assert ctl.cluster_state()["resident_jobs"] == 0
+    # a job this controller never admitted still raises
+    with pytest.raises(KeyError):
+        ctl.report_completion("never#admitted")
+
+
+# -- tenant-overload scenario ------------------------------------------------
+
+
+def test_tenant_overload_scenario_all_oracles_pass(tmp_path):
+    spec = tenant_overload_spec(smoke=True, base_rate=80.0, duration_s=2.0)
+    fleet = ClusterFrontend(fit_abacus(), n_replicas=2,
+                            trace_root=str(tmp_path / "traces"),
+                            feedback_root=str(tmp_path / "fb"),
+                            tracer=scenario_trace,
+                            max_batch=4, max_queue=8, shed_watermark=6,
+                            tenant_weights={"bulk": 4.0, "slo": 1.0})
+    fleet.start()
+    try:
+        result = ScenarioRunner(fleet, generate(spec)).run()
+    finally:
+        fleet.stop()
+    bad = failed(check_all(result))
+    assert not bad, [(r.name, r.detail) for r in bad]
+    g = result.ground
+    assert g["shed"] > 0, "overload scenario never tripped the watermark"
+    # shed accounting is EXACT: stats plane equals ground truth
+    assert oracle_overload_accounting(result).ok
+    ov = result.stats_after["overload"]
+    assert ov["fleet"]["shed"] + ov["retired"]["shed"] == g["shed"]
