@@ -1,0 +1,450 @@
+"""Store engines: segment log vs file-per-key, plus the differential soak.
+
+Two jobs in one module:
+
+1. **Perf gates** (``run``/``--smoke``): the reason ``SegmentLogStore``
+   exists is cold-start and bulk-move cost at fleet scale. We populate
+   both engines with the same N keys and time (a) open-to-full-inventory
+   — the JSON engine must parse N files, the segment engine scans a
+   handful of logs — (b) a merge of a key slice into a fresh store, and
+   (c) a reshard-style ``split`` of the same slice. Acceptance: segment
+   inventory >= 5x faster than file-per-key, and the split is a parity
+   check across engines — same keys moved, byte-identical contents in
+   the destination (``reshard_parity``).
+
+2. **Differential soak** (``--soak N`` / ``--replay FILE``): the op
+   engine used by ``tests/test_store_engines.py`` at nightly scale. A
+   seeded random sequence of put/delete/merge/split/compact/clear ops is
+   applied in lockstep to a JSON-backed and a segment-backed store pair;
+   every op's return value must match and content digests are compared
+   along the way. The full op log is written as JSONL *before* the run,
+   so a failure is replayable bit-for-bit with ``--replay``.
+
+    PYTHONPATH=src python benchmarks/bench_kvstore.py --smoke
+    PYTHONPATH=src python benchmarks/bench_kvstore.py --soak 100000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.serve.kvstore import JsonFileStore, SegmentLogStore
+
+# -- differential op engine ---------------------------------------------------
+
+# Fixed key pool, already in filename order (fingerprints ascend with i)
+# so slice ops visit keys in the engines' shared iteration order.
+KEY_POOL = [(f"{i:02x}" * 8, 2 * (i % 4) + 2, 32 * (i % 3 + 1))
+            for i in range(12)]
+
+
+class _TagValues:
+    """Minimal value semantics for engine-differential runs:
+    value = {tag: count}, merge = max-count union (commutative,
+    idempotent, deterministic — no wall-clock, no randomness)."""
+
+    FILE_PREFIX = "tag_"
+    VALUE_FIELD = "tags"
+
+    def _check_raw(self, raw):
+        if not isinstance(raw, dict):
+            raise ValueError("missing tag map")
+        return raw
+
+    def _merge_raw(self, mine, theirs):
+        merged = dict(mine or {})
+        n_new = 0
+        for tag, count in theirs.items():
+            if int(merged.get(tag, -1)) < int(count):
+                merged[tag] = int(count)
+                n_new += 1
+        return merged, n_new
+
+
+class TagJsonStore(_TagValues, JsonFileStore):
+    """JSON engine with mtimes pinned to a logical clock, so entry-cap
+    compaction (newest-by-mtime) is comparable against the segment
+    engine's record timestamps (newest-by-``ts``)."""
+
+    def __init__(self, root, clock=None):
+        super().__init__(root)
+        self._bench_clock = clock
+
+    def put_raw(self, key, raw):
+        path = super().put_raw(key, raw)
+        if self._bench_clock is not None:
+            t = float(self._bench_clock())
+            os.utime(path, (t, t))
+        return path
+
+
+class TagSegStore(_TagValues, SegmentLogStore):
+    def __init__(self, root, clock=None, segment_bytes=None):
+        super().__init__(root, segment_bytes=segment_bytes)
+        if clock is not None:
+            self._clock = clock
+
+
+def make_pair(root, backend, clock, segment_bytes=None):
+    """A (main, peer) store pair for one engine, timestamped by
+    ``clock`` (a zero-arg callable) on every record landing."""
+    if backend == "json":
+        return (TagJsonStore(os.path.join(root, "a"), clock=clock),
+                TagJsonStore(os.path.join(root, "b"), clock=clock))
+    return (TagSegStore(os.path.join(root, "a"), clock=clock,
+                        segment_bytes=segment_bytes),
+            TagSegStore(os.path.join(root, "b"), clock=clock,
+                        segment_bytes=segment_bytes))
+
+
+def gen_ops(rng, n_ops):
+    """Seeded random op sequence over a two-store pair (JSON-able)."""
+    ops = []
+    for _ in range(int(n_ops)):
+        r = float(rng.random())
+        which = int(rng.integers(0, 2))
+        ki = int(rng.integers(0, len(KEY_POOL)))
+        if r < 0.45:
+            tags = {f"t{int(rng.integers(0, 5))}": int(rng.integers(1, 9))
+                    for _ in range(int(rng.integers(1, 4)))}
+            ops.append({"op": "put", "store": which, "key": ki,
+                        "tags": tags})
+        elif r < 0.55:
+            ops.append({"op": "delete", "store": which, "key": ki})
+        elif r < 0.70:
+            ops.append({"op": "merge", "dst": which})
+        elif r < 0.78:
+            sub = sorted(int(x) for x in rng.choice(
+                len(KEY_POOL), size=int(rng.integers(1, 6)), replace=False))
+            ops.append({"op": "merge_keys", "dst": which, "keys": sub})
+        elif r < 0.90:
+            sub = sorted(int(x) for x in rng.choice(
+                len(KEY_POOL), size=int(rng.integers(1, 6)), replace=False))
+            ops.append({"op": "split", "src": which, "keys": sub})
+        elif r < 0.97:
+            cap = None if r < 0.93 else int(rng.integers(0, 10))
+            ops.append({"op": "compact", "store": which,
+                        "max_entries": cap})
+        else:
+            ops.append({"op": "clear", "store": which})
+    return ops
+
+
+def apply_op(stores, op, clock):
+    """Apply one op to a store pair; returns a JSON-able result dict.
+
+    ``clock`` is the shared logical-clock cell (``{"t": float}``) the
+    pair's stores read timestamps from; every op advances it, so
+    newest-wins ordering is identical across engines.
+    """
+    clock["t"] += 1.0
+    kind = op["op"]
+    if kind == "put":
+        stores[op["store"]].put_raw(KEY_POOL[op["key"]], dict(op["tags"]))
+        return {"op": "put"}
+    if kind == "delete":
+        removed = stores[op["store"]]._delete_key(KEY_POOL[op["key"]])
+        return {"op": "delete", "removed": bool(removed)}
+    if kind == "merge":
+        dst = op["dst"]
+        return {"op": "merge",
+                "imported": stores[dst].merge(stores[1 - dst])}
+    if kind == "merge_keys":
+        dst = op["dst"]
+        keys = [KEY_POOL[i] for i in op["keys"]]
+        return {"op": "merge",
+                "imported": stores[dst].merge(stores[1 - dst], keys=keys)}
+    if kind == "split":
+        src = op["src"]
+        keys = [KEY_POOL[i] for i in op["keys"]]
+        return {"op": "split",
+                **stores[src].split(keys, into=stores[1 - src])}
+    if kind == "compact":
+        out = stores[op["store"]].compact(max_entries=op["max_entries"])
+        return {"op": "compact", **out}
+    if kind == "clear":
+        return {"op": "clear", "removed": stores[op["store"]].clear()}
+    raise ValueError(f"unknown op {kind!r}")
+
+
+def store_digest(store):
+    """Byte-comparable content digest: canonical JSON of the full
+    ``filename -> value`` map (filename is both engines' sort key)."""
+    snap = {store.filename(k): v for k, v in store.iter_raw()}
+    return json.dumps(snap, sort_keys=True)
+
+
+def run_differential(root, ops, segment_bytes=None, check_every=1000,
+                     verbose=False):
+    """Lockstep-apply ``ops`` to both engines; returns a report dict.
+
+    Every op's return value must be identical across engines; content
+    digests of both stores are compared every ``check_every`` ops and
+    at the end (plus once more after reopening fresh instances, which
+    exercises the segment index rebuild). ``ok`` is False on the first
+    divergence, with the failing op index in ``mismatch_at``.
+    """
+    clock_j, clock_s = {"t": 1000.0}, {"t": 1000.0}
+    js = make_pair(os.path.join(root, "json"), "json", lambda: clock_j["t"])
+    sg = make_pair(os.path.join(root, "segment"), "segment",
+                   lambda: clock_s["t"], segment_bytes=segment_bytes)
+
+    def _digests_equal():
+        for a, b in zip(js, sg):
+            if store_digest(a) != store_digest(b):
+                return False
+        return True
+
+    for i, op in enumerate(ops):
+        rj = apply_op(js, op, clock_j)
+        rs = apply_op(sg, op, clock_s)
+        if rj != rs:
+            return {"ok": False, "mismatch_at": i, "op": op,
+                    "json_result": rj, "segment_result": rs}
+        if (i + 1) % check_every == 0:
+            if not _digests_equal():
+                return {"ok": False, "mismatch_at": i, "op": op,
+                        "reason": "content digest diverged"}
+            if verbose:
+                print(f"# soak: {i + 1}/{len(ops)} ops ok", flush=True)
+    if not _digests_equal():
+        return {"ok": False, "mismatch_at": len(ops) - 1,
+                "reason": "final content digest diverged"}
+    # fresh instances over the same directories (index rebuild path)
+    js2 = make_pair(os.path.join(root, "json"), "json", lambda: clock_j["t"])
+    sg2 = make_pair(os.path.join(root, "segment"), "segment",
+                    lambda: clock_s["t"], segment_bytes=segment_bytes)
+    for a, b in zip(js2, sg2):
+        if store_digest(a) != store_digest(b):
+            return {"ok": False, "mismatch_at": len(ops) - 1,
+                    "reason": "reopened content digest diverged"}
+    return {"ok": True, "ops": len(ops)}
+
+
+# -- perf gates ---------------------------------------------------------------
+
+
+class _RecValues:
+    """Trace-like value semantics for the perf gates: deterministic
+    record union (same shape as ``TraceValues._merge_raw``)."""
+
+    FILE_PREFIX = "tr_"
+    VALUE_FIELD = "record"
+
+    def _check_raw(self, raw):
+        if not isinstance(raw, dict):
+            raise ValueError("missing record payload")
+        return raw
+
+    def _merge_raw(self, mine, theirs):
+        if mine is None:
+            return theirs, 1
+        if mine == theirs:
+            return mine, 0
+        keep = (json.dumps(mine, sort_keys=True)
+                >= json.dumps(theirs, sort_keys=True))
+        return (mine, 0) if keep else (theirs, 1)
+
+
+class RecJsonStore(_RecValues, JsonFileStore):
+    pass
+
+
+class RecSegStore(_RecValues, SegmentLogStore):
+    pass
+
+
+def _bench_key(i):
+    return (f"{i:08x}" + "00000000", 2, 32)
+
+
+def _bench_value(i):
+    """Trace-record-sized value (~3.5 KB — a ProfileRecord whose NSM
+    edge map covers a ~120-op graph): realistic per-key payload so the
+    engines' open/merge costs reflect fleet records, not toys."""
+    return {"t": i % 7 + 1, "n": i,
+            "edges": {f"op{j:03d}->op{(j + 1) % 120:03d}": float(i + j)
+                      for j in range(120)},
+            "meta": {"model": f"job{i:06d}", "family": "dense",
+                     "layers": i % 24, "note": "x" * 400}}
+
+
+def _populate(store, n):
+    t0 = time.perf_counter()
+    for i in range(n):
+        store.put_raw(_bench_key(i), _bench_value(i))
+    return time.perf_counter() - t0
+
+
+def _inventory_time(make_store, backend):
+    """Cold start to serving-ready, per engine's own protocol.
+
+    The segment engine is ready once its index rebuild finishes (every
+    record CRC-checked, keys known, gets O(1) after). The JSON engine
+    has no index: knowing its validated inventory means parsing every
+    file (a filename whose stored key disagrees is only discoverable by
+    loading it) — the cost its crash-rebuild path actually pays."""
+    t0 = time.perf_counter()
+    store = make_store()
+    if backend == "segment":
+        n = len(store)  # forces the index rebuild
+    else:
+        n = sum(1 for _ in store.iter_raw())
+    return time.perf_counter() - t0, n
+
+
+def run(smoke: bool = True, out: str = "BENCH_kvstore.json"):
+    n_keys = 10_000 if smoke else 50_000
+    n_slice = 2_000 if smoke else 10_000
+    slice_keys = [_bench_key(i) for i in range(n_slice)]
+    root = tempfile.mkdtemp(prefix="abacus_kvstore_")
+    rows = [("n_keys", float(n_keys)), ("slice_keys", float(n_slice))]
+    try:
+        makers = {
+            "json": lambda sub: RecJsonStore(os.path.join(root, sub)),
+            "segment": lambda sub: RecSegStore(os.path.join(root, sub),
+                                               segment_bytes=4 << 20),
+        }
+        moved, digests = {}, {}
+        for backend, mk in makers.items():
+            src = mk(backend + "_src")
+            rows.append((f"populate_s_{backend}", _populate(src, n_keys)))
+            open_s, n = _inventory_time(lambda: mk(backend + "_src"),
+                                        backend)
+            assert n == n_keys, f"{backend} inventory {n} != {n_keys}"
+            rows.append((f"open_s_{backend}", open_s))
+            dst = mk(backend + "_merge_dst")
+            t0 = time.perf_counter()
+            imported = dst.merge(src, keys=slice_keys)
+            rows.append((f"merge_s_{backend}", time.perf_counter() - t0))
+            assert imported == n_slice  # record union: one unit per new key
+            # reshard-style slice migration: same keys must move and the
+            # destination contents must be byte-identical across engines
+            shard = mk(backend + "_shard")
+            t0 = time.perf_counter()
+            moved[backend] = src.split(slice_keys, into=shard)
+            rows.append((f"split_s_{backend}", time.perf_counter() - t0))
+            digests[backend] = store_digest(shard)
+            assert len(src.raw_snapshot()) == n_keys - n_slice
+        vals = dict(rows)
+        parity = (moved["json"] == moved["segment"]
+                  and digests["json"] == digests["segment"])
+        rows.append(("open_speedup", vals["open_s_json"]
+                     / max(vals["open_s_segment"], 1e-9)))
+        rows.append(("reshard_parity", 1.0 if parity else 0.0))
+        if out:
+            payload = {name: val for name, val in rows}
+            payload["smoke"] = smoke
+            with open(out, "w") as f:
+                json.dump(payload, f, indent=2)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+# -- soak / replay ------------------------------------------------------------
+
+
+def soak(n_ops, seed, log_path, segment_bytes=32 << 10, ops=None):
+    """Differential soak; writes the op log FIRST, returns 0/1.
+
+    The log is one JSON line per op plus a trailing ``meta`` line, so a
+    red nightly uploads everything needed for a bit-for-bit local
+    replay (``--replay``)."""
+    if ops is None:
+        ops = gen_ops(np.random.default_rng(seed), n_ops)
+    os.makedirs(os.path.dirname(log_path) or ".", exist_ok=True)
+    with open(log_path, "w") as f:
+        for op in ops:
+            f.write(json.dumps(op, sort_keys=True) + "\n")
+        f.write(json.dumps({"meta": {"seed": seed, "n_ops": len(ops),
+                                     "segment_bytes": segment_bytes}}) + "\n")
+    root = tempfile.mkdtemp(prefix="abacus_kvstore_soak_")
+    try:
+        report = run_differential(root, ops, segment_bytes=segment_bytes,
+                                  verbose=True)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    if report["ok"]:
+        print(f"soak_ops,{len(ops)}")
+        print("soak_ok,1")
+        return 0
+    print("soak_ok,0")
+    print(f"# FAIL: engines diverged at op {report['mismatch_at']}: "
+          f"{json.dumps(report, sort_keys=True, default=str)}",
+          file=sys.stderr)
+    with open(log_path, "a") as f:
+        f.write(json.dumps({"mismatch": report}, sort_keys=True,
+                           default=str) + "\n")
+    return 1
+
+
+def replay(log_path, segment_bytes=None):
+    """Re-run a soak op log bit-for-bit; returns 0/1."""
+    ops, meta = [], {}
+    with open(log_path) as f:
+        for line in f:
+            obj = json.loads(line)
+            if "meta" in obj:
+                meta = obj["meta"]
+            elif "mismatch" not in obj:
+                ops.append(obj)
+    sb = segment_bytes or meta.get("segment_bytes") or 32 << 10
+    root = tempfile.mkdtemp(prefix="abacus_kvstore_replay_")
+    try:
+        report = run_differential(root, ops, segment_bytes=sb, verbose=True)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    print(f"replay_ops,{len(ops)}")
+    print(f"replay_ok,{1 if report['ok'] else 0}")
+    if not report["ok"]:
+        print(f"# FAIL: {json.dumps(report, sort_keys=True, default=str)}",
+              file=sys.stderr)
+    return 0 if report["ok"] else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="10k keys / 2k slice (seconds; CI tier-1)")
+    ap.add_argument("--out", default="BENCH_kvstore.json")
+    ap.add_argument("--soak", type=int, default=0, metavar="N_OPS",
+                    help="run the N-op differential soak instead of the "
+                         "perf gates")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--soak-log", default="artifacts/kvstore_soak_ops.jsonl")
+    ap.add_argument("--replay", default=None, metavar="LOG",
+                    help="replay a previously written soak op log")
+    args = ap.parse_args(argv)
+    if args.replay:
+        return replay(args.replay)
+    if args.soak:
+        return soak(args.soak, args.seed, args.soak_log)
+    rows = run(smoke=args.smoke, out=args.out)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    vals = dict(rows)
+    rc = 0
+    if vals["open_speedup"] < 5.0:
+        print(f"# FAIL: segment inventory only {vals['open_speedup']:.2f}x "
+              "faster than file-per-key (floor 5x)", file=sys.stderr)
+        rc = 1
+    if vals["reshard_parity"] != 1.0:
+        print("# FAIL: reshard slice migration diverged across engines",
+              file=sys.stderr)
+        rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

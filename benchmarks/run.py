@@ -32,6 +32,7 @@ BENCHES = [
     ("scenarios", "benchmarks.bench_scenarios"),        # drift-scenario zoo
     ("overload", "benchmarks.bench_overload"),          # shed/EDF/quota gates
     ("roofline", "benchmarks.bench_roofline"),          # §Roofline
+    ("kvstore", "benchmarks.bench_kvstore"),            # store engines
 ]
 
 

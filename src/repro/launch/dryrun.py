@@ -233,6 +233,12 @@ def main(argv=None) -> int:
                          "the TCP frame transport; a crashed replica is "
                          "auto-excluded and its warm slice rebuilt from "
                          "disk by the surviving owners")
+    ap.add_argument("--store-backend", default=None,
+                    choices=("json", "segment"),
+                    help="physical layout for the trace/feedback stores "
+                         "(default: REPRO_STORE_BACKEND env var, else "
+                         "json); exported to RPC children so every "
+                         "process reads one layout")
     ap.add_argument("--metrics-out", default=None,
                     help="with --predict: write the serving metrics "
                          "snapshot here at sweep end (.prom/.txt -> "
@@ -250,12 +256,16 @@ def main(argv=None) -> int:
         print("[dryrun] --rpc needs a fleet (--replicas > 1); serving "
               "in-process", file=sys.stderr)
         args.rpc = False
+    if args.store_backend:
+        # one env var selects the layout everywhere: the factories below
+        # read it, and spawned RPC children inherit it
+        os.environ["REPRO_STORE_BACKEND"] = args.store_backend
     if args.predict:
         from repro.core.predictor import DNNAbacus
         from repro.obs import events
-        from repro.serve.feedback_store import FeedbackStore
+        from repro.serve.feedback_store import make_feedback_store
         from repro.serve.server import AbacusServer
-        from repro.serve.trace_store import TraceStore
+        from repro.serve.trace_store import make_trace_store
         if args.events_out:
             # O_APPEND one-line writes: RPC children share the same file
             events.configure(path=args.events_out)
@@ -296,11 +306,11 @@ def main(argv=None) -> int:
                     trace_root=args.trace_store or None,
                     feedback_root=args.feedback_store or None).start()
             else:
-                store = (TraceStore(args.trace_store)
+                store = (make_trace_store(args.trace_store)
                          if args.trace_store else None)
                 service = DNNAbacus.load(
                     args.predictor_path).service(store=store)
-                feedback = (FeedbackStore(args.feedback_store)
+                feedback = (make_feedback_store(args.feedback_store)
                             if args.feedback_store else None)
                 # estimates go through the micro-batched gateway, sharing
                 # its trace cache (and store) with any concurrent admission

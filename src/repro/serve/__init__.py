@@ -8,7 +8,10 @@ multi-host fabric (``ClusterFrontend``, ``GatewayReplica``,
 ``ReplicaServer``, ``spawn_fleet``) are pure numpy/stdlib and
 re-exported here; ``repro.serve.engine`` (the jax decode engine) is
 imported lazily by consumers that need it. All durable maps share one
-persistence base, ``repro.serve.kvstore.JsonFileStore``.
+store contract (``repro.serve.kvstore.KVStoreBase``) over two
+interchangeable engines: file-per-key ``JsonFileStore`` and the
+append-only ``SegmentLogStore`` (``make_trace_store`` /
+``make_feedback_store`` select by name or ``REPRO_STORE_BACKEND``).
 """
 
 from repro.serve.admission import AdmissionController, Verdict
@@ -17,14 +20,18 @@ from repro.serve.cluster import (ClusterFrontend, GatewayReplica,
                                  ReplicaNotRunning, ReplicaUnavailable,
                                  RingDiff)
 from repro.serve.feedback_store import (CalibrationWindow, FeedbackStore,
-                                        Observation, TenantCalibration)
-from repro.serve.kvstore import JsonFileStore, atomic_write_json
+                                        Observation, SegmentFeedbackStore,
+                                        TenantCalibration,
+                                        make_feedback_store)
+from repro.serve.kvstore import (JsonFileStore, KVStoreBase, SegmentLogStore,
+                                 atomic_write_json, store_backend)
 from repro.serve.prediction_service import (PredictionService, Query,
                                             config_fingerprint)
 from repro.serve.refit import ModelGeneration, OnlineRefitter
 from repro.serve.server import (AbacusServer, DeadlineExceeded,
                                 QuotaExceeded)
-from repro.serve.trace_store import TraceStore
+from repro.serve.trace_store import (SegmentTraceStore, TraceStore,
+                                     make_trace_store)
 
 # Lazy (PEP 562) so `python -m repro.serve.rpc` does not import the rpc
 # module twice (once via this package, once as __main__ — runpy warns).
@@ -42,10 +49,13 @@ def __getattr__(name):
 
 __all__ = ["AdmissionController", "Verdict", "PredictionService", "Query",
            "config_fingerprint", "AbacusServer", "DeadlineExceeded",
-           "QuotaExceeded", "TraceStore",
-           "FeedbackStore", "Observation", "CalibrationWindow",
+           "QuotaExceeded", "TraceStore", "SegmentTraceStore",
+           "make_trace_store",
+           "FeedbackStore", "SegmentFeedbackStore", "make_feedback_store",
+           "Observation", "CalibrationWindow",
            "TenantCalibration",
-           "OnlineRefitter", "ModelGeneration", "JsonFileStore",
+           "OnlineRefitter", "ModelGeneration", "KVStoreBase",
+           "JsonFileStore", "SegmentLogStore", "store_backend",
            "atomic_write_json", "ClusterFrontend", "GatewayReplica",
            "GenerationPublisher", "HashRing", "RingDiff",
            "ReplicaUnavailable", "ReplicaNotRunning", "RemoteReplica",

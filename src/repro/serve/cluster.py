@@ -61,13 +61,13 @@ from repro.obs import events
 from repro.obs.metrics import (CounterDict, MetricsRegistry, merge_snapshots,
                                render_prometheus)
 from repro.obs.tracing import SpanSink, make_span, new_context
-from repro.serve.feedback_store import FeedbackStore
+from repro.serve.feedback_store import FeedbackStore, make_feedback_store
 from repro.serve.prediction_service import (PredictionService, Query,
                                             config_fingerprint, trace_query)
 from repro.serve.refit import OnlineRefitter
 from repro.serve.server import (AbacusServer, DeadlineExceeded, QuotaExceeded,
                                 ServerStats, _results_by_deadline)
-from repro.serve.trace_store import TraceStore
+from repro.serve.trace_store import TraceStore, make_trace_store
 
 
 class ReplicaUnavailable(RuntimeError):
@@ -380,11 +380,16 @@ class ClusterFrontend:
                  hedge_after_s: Optional[float] = None,
                  auto_exclude: bool = True,
                  max_retries: int = 3,
+                 store_backend: Optional[str] = None,
                  **server_kw):
         # construction recipe, kept so live resharding can mint replicas
         self._abacus = abacus
         self._trace_root = trace_root
         self._feedback_root = feedback_root
+        # physical store layout for every slice this fleet mints (per-
+        # replica trace/feedback stores AND the central feedback store):
+        # None defers to REPRO_STORE_BACKEND / "json" at build time
+        self._store_backend = store_backend
         self._tracer = tracer
         self._vnodes = int(vnodes)
         self._service_kw = service_kw
@@ -455,8 +460,9 @@ class ClusterFrontend:
         for r in self.replicas:
             self._wire_failure_handling(r)
         # central (federated) feedback store: the refitter's input
-        self.feedback = (FeedbackStore(os.path.join(feedback_root, "central"))
-                         if feedback_root else None)
+        self.feedback = (make_feedback_store(
+            os.path.join(feedback_root, "central"),
+            backend=self._store_backend) if feedback_root else None)
         self.refitter: Optional[OnlineRefitter] = None
         self.publisher: Optional[GenerationPublisher] = None
 
@@ -466,10 +472,12 @@ class ClusterFrontend:
             raise ValueError(
                 "this frontend wraps pre-built replicas; pass a "
                 "GatewayReplica object instead of a bare name")
-        store = (TraceStore(os.path.join(self._trace_root, name))
+        store = (make_trace_store(os.path.join(self._trace_root, name),
+                                  backend=self._store_backend)
                  if self._trace_root else None)
-        feedback = (FeedbackStore(os.path.join(self._feedback_root, name))
-                    if self._feedback_root else None)
+        feedback = (make_feedback_store(
+            os.path.join(self._feedback_root, name),
+            backend=self._store_backend) if self._feedback_root else None)
         return GatewayReplica(name, self._abacus, store=store,
                               feedback=feedback, tracer=self._tracer,
                               service_kw=self._service_kw, **self._server_kw)

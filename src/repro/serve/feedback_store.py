@@ -7,14 +7,18 @@ persists those outcomes and tracks calibration:
 
   * ``Observation`` — one finished job's measured ``(time_s, mem_bytes)``
     plus the prediction context (generation, timestamp, job id).
-  * ``FeedbackStore`` — durable ``(config fingerprint, batch, seq) ->
-    {obs_id: Observation}`` map on disk. All persistence mechanics
-    (atomic writes, the shared schema version, corrupt-files-skipped
-    loads, order-independent ``merge``) live in the shared
-    ``repro.serve.kvstore.JsonFileStore`` base. Observation ids are
-    content-derived when the caller supplies none, so re-reporting the
-    same completion is idempotent and ``merge`` (union by id) is
-    order-independent — the property multi-host aggregation relies on.
+  * ``FeedbackStore`` / ``SegmentFeedbackStore`` — durable
+    ``(config fingerprint, batch, seq) -> {obs_id: Observation}`` map on
+    disk, the ``FeedbackValues`` mixin composed with either
+    ``repro.serve.kvstore`` engine (file-per-key JSON, or the
+    append-only segment log; ``make_feedback_store`` selects by name or
+    the ``REPRO_STORE_BACKEND`` env var). All persistence mechanics
+    (atomic writes, the shared schema version, corrupt-records-skipped
+    loads, order-independent ``merge``) live in the engines.
+    Observation ids are content-derived when the caller supplies none,
+    so re-reporting the same completion is idempotent and ``merge``
+    (union by id) is order-independent — the property multi-host
+    aggregation relies on.
   * ``CalibrationWindow`` — rolling predicted-vs-observed window with
     per-generation MRE and signed drift, surfaced via
     ``AbacusServer.stats()``.
@@ -32,15 +36,16 @@ import dataclasses
 import hashlib
 import json
 import math
-import os
 import threading
 import time
 from collections import deque
 from typing import Dict, Iterator, List, Optional, Tuple
 
-from repro.serve.kvstore import SCHEMA_VERSION, JsonFileStore, StoreKey
+from repro.serve.kvstore import (SCHEMA_VERSION, JsonFileStore,
+                                 SegmentLogStore, StoreKey, store_backend)
 
 __all__ = ["Observation", "observation_id", "FeedbackStats", "FeedbackStore",
+           "SegmentFeedbackStore", "make_feedback_store", "FeedbackValues",
            "CalibrationWindow", "TenantCalibration", "StoreKey",
            "SCHEMA_VERSION"]
 
@@ -92,14 +97,19 @@ class FeedbackStats:
         return dataclasses.asdict(self)
 
 
-class FeedbackStore(JsonFileStore):
-    """Durable measured-cost observations, one JSON file per key."""
+class FeedbackValues:
+    """Feedback value semantics, independent of physical layout.
+
+    Defines what a *feedback* value is — the ``{obs_id: Observation}``
+    map, id-union merge, dedup-on-add, the observation-level ``compact``
+    — as a mixin over any ``repro.serve.kvstore`` engine.
+    """
 
     FILE_PREFIX = "fb_"
     VALUE_FIELD = "obs"
 
-    def __init__(self, root: str):
-        super().__init__(root)
+    def __init__(self, root: str, **kwargs):
+        super().__init__(root, **kwargs)
         self.stats = FeedbackStats()
         # observation count is cached: threshold checks / stats polls run
         # on every observe() and must not re-scan the whole directory.
@@ -107,7 +117,7 @@ class FeedbackStore(JsonFileStore):
         # THIS process (a concurrent process's writes surface on rescan).
         self._total: Optional[int] = None
 
-    # -- JsonFileStore hooks ------------------------------------------------
+    # -- store engine hooks -------------------------------------------------
     def _check_raw(self, raw):
         if not isinstance(raw, dict):
             raise ValueError("missing observation map")
@@ -251,21 +261,21 @@ class FeedbackStore(JsonFileStore):
         deployment (e.g. every ``dryrun --predict`` sweep appending
         here) grows without bound otherwise — and refit targets only
         use each key's newest window anyway. Returns removal counts.
+
+        Layout-agnostic: records that no longer load are purged through
+        the engine (``_purge_unloadable``), per-observation pruning goes
+        through ``get_raw``/``put_raw``/``_delete_key``, and the final
+        ``_reclaim`` lets the segment engine rewrite away dead bytes
+        (a no-op for the file-per-key layout).
         """
         now = time.time()
-        removed = {"expired": 0, "over_cap": 0, "corrupt_files": 0}
-        for name in self._files():
-            path = os.path.join(self.root, name)
+        removed = {"expired": 0, "over_cap": 0,
+                   "corrupt_files": self._purge_unloadable()}
+        for key in [k for k, _ in self.iter_raw()]:
             with self._lock:
-                payload = self._load_payload(path)
-                if payload is None:
-                    try:
-                        os.unlink(path)
-                        removed["corrupt_files"] += 1
-                    except OSError:
-                        pass
-                    continue
-                obs = payload[self.VALUE_FIELD]
+                obs = self.get_raw(key)
+                if obs is None:
+                    continue  # vanished/corrupted since the listing
                 keep = dict(obs)
                 if max_age_s is not None:
                     fresh = {oid: d for oid, d in keep.items()
@@ -281,20 +291,36 @@ class FeedbackStore(JsonFileStore):
                 if len(keep) == len(obs):
                     continue
                 if keep:
-                    self.put_raw(payload["key"], keep)
+                    self.put_raw(key, keep)
                 else:
-                    try:
-                        os.unlink(path)
-                    except OSError:
-                        pass
+                    self._delete_key(key)
                 self._total = None  # recount lazily
+        self._reclaim()  # segment engine: rewrite away the dead bytes
         return {**removed,
                 "removed": removed["expired"] + removed["over_cap"],
                 "kept": self.total(rescan=True)}
 
     def info(self) -> Dict[str, int]:
-        return {"feedback_keys": len(self._files()),
+        return {"feedback_keys": len(self),
                 "feedback_total": self.total(), **self.stats.as_dict()}
+
+
+class FeedbackStore(FeedbackValues, JsonFileStore):
+    """Durable measured-cost observations, one JSON file per key (the
+    historical layout)."""
+
+
+class SegmentFeedbackStore(FeedbackValues, SegmentLogStore):
+    """Feedback store on the append-only segment-log engine."""
+
+
+def make_feedback_store(root: str,
+                        backend: Optional[str] = None) -> FeedbackValues:
+    """Feedback store on the selected engine (arg >
+    ``REPRO_STORE_BACKEND`` env var > ``json``)."""
+    cls = {"json": FeedbackStore,
+           "segment": SegmentFeedbackStore}[store_backend(backend)]
+    return cls(root)
 
 
 class CalibrationWindow:

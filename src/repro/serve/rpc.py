@@ -71,12 +71,12 @@ from repro.core.predictor import DNNAbacus
 from repro.obs import events
 from repro.serve.cluster import (GatewayReplica, ReplicaNotRunning,
                                  ReplicaUnavailable)
-from repro.serve.feedback_store import FeedbackStore
+from repro.serve.feedback_store import make_feedback_store
 from repro.serve.prediction_service import Query
 from repro.serve.refit import ModelGeneration
 from repro.serve.server import (DeadlineExceeded, QuotaExceeded,
                                 ServerStats)
-from repro.serve.trace_store import TraceStore
+from repro.serve.trace_store import TraceStore, make_trace_store
 
 MAX_FRAME = 64 << 20  # one serialized DNNAbacus generation fits with room
 
@@ -584,10 +584,12 @@ class RemoteReplica:
         self.submit_timeout = float(submit_timeout)
         self.heartbeat_interval = float(heartbeat_interval)
         self.heartbeat_misses = int(heartbeat_misses)
-        self.feedback = (FeedbackStore(feedback_root)
+        # backend from REPRO_STORE_BACKEND (inherited by spawned server
+        # children, so both sides of the wire read one physical layout)
+        self.feedback = (make_feedback_store(feedback_root)
                          if feedback_root else None)
         self.service = _RemoteService(
-            self, TraceStore(trace_root) if trace_root else None)
+            self, make_trace_store(trace_root) if trace_root else None)
         self.stats = _RemoteStats(self)
         self._counters_cache: Dict[str, int] = {}
         self._overload_cache: Dict[str, int] = {}
@@ -1067,8 +1069,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         server_kw["shed_watermark"] = args.shed_watermark
     replica = GatewayReplica(
         args.name, DNNAbacus.load(args.predictor),
-        store=TraceStore(args.trace_store) if args.trace_store else None,
-        feedback=(FeedbackStore(args.feedback_store)
+        store=(make_trace_store(args.trace_store)
+               if args.trace_store else None),
+        feedback=(make_feedback_store(args.feedback_store)
                   if args.feedback_store else None),
         tracer=resolve_tracer(args.tracer), max_batch=args.max_batch,
         trace_workers=args.trace_workers, **server_kw)

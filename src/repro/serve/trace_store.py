@@ -8,11 +8,17 @@ has ever answered. ``TraceStore`` persists traced ``ProfileRecord``s
 fresh process warm-starts from prior traces: load-on-miss, atomic
 write-on-trace.
 
-All persistence mechanics — one JSON file per key, versioned schema,
-corrupt/foreign files skipped (counted, never fatal), temp +
-``os.replace`` writes, TTL/entry-cap ``compact``, order-independent
-``merge`` — live in the shared ``repro.serve.kvstore.JsonFileStore``
-base; this module only defines what a *trace* value is.
+All persistence mechanics — versioned schema, corrupt/foreign records
+skipped (counted, never fatal), atomic writes, TTL/entry-cap
+``compact``, order-independent ``merge`` — live in the shared
+``repro.serve.kvstore`` engines; this module only defines what a
+*trace* value is (the ``TraceValues`` mixin), composed with either
+physical layout:
+
+  * ``TraceStore`` — the historical file-per-key JSON layout.
+  * ``SegmentTraceStore`` — the append-only segment-log layout.
+  * ``make_trace_store`` — backend-selected construction
+    (``REPRO_STORE_BACKEND`` chooses the fleet-wide default).
 """
 
 from __future__ import annotations
@@ -22,10 +28,12 @@ import json
 from typing import Dict, Optional
 
 from repro.core.features import ProfileRecord, record_from_json, record_to_json
-from repro.serve.kvstore import (SCHEMA_VERSION, JsonFileStore, StoreKey,
-                                 atomic_write_json)
+from repro.serve.kvstore import (SCHEMA_VERSION, STORE_BACKENDS,
+                                 JsonFileStore, SegmentLogStore, StoreKey,
+                                 atomic_write_json, store_backend)
 
-__all__ = ["TraceStore", "StoreStats", "StoreKey", "SCHEMA_VERSION",
+__all__ = ["TraceStore", "SegmentTraceStore", "make_trace_store",
+           "TraceValues", "StoreStats", "StoreKey", "SCHEMA_VERSION",
            "atomic_write_json"]
 
 
@@ -41,16 +49,21 @@ class StoreStats:
         return dataclasses.asdict(self)
 
 
-class TraceStore(JsonFileStore):
-    """Durable ``(fingerprint, batch, seq) -> ProfileRecord`` map on disk."""
+class TraceValues:
+    """Trace value semantics, independent of physical layout.
+
+    Defines what a *trace* value is — validation, the deterministic
+    record-union merge, stats accounting, the typed ``get``/``put``
+    API — as a mixin over any ``repro.serve.kvstore`` engine.
+    """
 
     VALUE_FIELD = "record"
 
-    def __init__(self, root: str):
-        super().__init__(root)
+    def __init__(self, root: str, **kwargs):
+        super().__init__(root, **kwargs)
         self.stats = StoreStats()
 
-    # -- JsonFileStore hooks ------------------------------------------------
+    # -- store engine hooks -------------------------------------------------
     def _check_raw(self, raw):
         if not isinstance(raw, dict):
             raise ValueError("missing record payload")
@@ -108,3 +121,24 @@ class TraceStore(JsonFileStore):
     # -- introspection ------------------------------------------------------
     def info(self) -> Dict[str, int]:
         return {"store_entries": len(self), **self.stats.as_dict()}
+
+
+class TraceStore(TraceValues, JsonFileStore):
+    """Durable ``(fingerprint, batch, seq) -> ProfileRecord`` map on disk,
+    one JSON file per key (the historical layout)."""
+
+
+class SegmentTraceStore(TraceValues, SegmentLogStore):
+    """Trace store on the append-only segment-log engine."""
+
+
+def make_trace_store(root: str, backend: Optional[str] = None) -> TraceValues:
+    """Trace store on the selected engine (arg > ``REPRO_STORE_BACKEND``
+    env var > ``json``). Both engines serve the identical contract; the
+    backend only changes the physical layout under ``root``."""
+    cls = {"json": TraceStore,
+           "segment": SegmentTraceStore}[store_backend(backend)]
+    return cls(root)
+
+
+assert set(STORE_BACKENDS) == {"json", "segment"}  # keep factories in sync

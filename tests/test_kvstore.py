@@ -291,12 +291,14 @@ def test_corrupt_injection_never_raises(seed, n_garbage):
         assert ts.get(key) is None
         assert fb.get(key) == []
         assert list(ts.keys()) == [] and fb.keys() == []
-        assert fb.total(rescan=True) == 0 and len(ts) >= 1
+        assert fb.total(rescan=True) == 0 and len(ts._files()) >= 1
         sink_t, sink_f = TraceStore(root + "/st"), FeedbackStore(root + "/sf")
         assert sink_t.merge(ts) == 0 and sink_f.merge(fb) == 0
         ts.compact(), fb.compact()
-        assert list(ts._files()) == [] or all(
-            ts._load_payload(os.path.join(ts.root, f)) for f in ts._files())
+        # compaction physically reclaimed the junk: a fresh instance
+        # scans the directory without finding a single corrupt record
+        rescan = TraceStore(root + "/t")
+        assert rescan.raw_snapshot() == {} and rescan.stats.corrupt == 0
         # a fresh put/add repairs each store
         ts.put(key, _rand_record(rng))
         fb.add(key, 2.0, 1e9, ts=2.0)

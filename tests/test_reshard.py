@@ -366,7 +366,7 @@ def test_migrate_failure_restores_service_on_the_old_ring(tmp_path,
     """A migration that fails mid-handoff (e.g. disk full) must restart
     the drained replicas on the OLD ring — their shards keep serving —
     and a retry completes the reshard."""
-    from repro.serve.kvstore import JsonFileStore
+    from repro.serve.kvstore import KVStoreBase
     fleet = _fleet(3, tmp_path)
     queries = _grid(names="abcdefghijkl", seqs=(32,))
     with fleet:
@@ -375,7 +375,8 @@ def test_migrate_failure_restores_service_on_the_old_ring(tmp_path,
         def boom(self, keys, into):
             raise OSError("disk full")
 
-        monkeypatch.setattr(JsonFileStore, "split", boom)
+        # patched on the contract base so it fires on EITHER engine
+        monkeypatch.setattr(KVStoreBase, "split", boom)
         with pytest.raises(OSError, match="disk full"):
             fleet.remove_replica("r2")
         assert [r.name for r in fleet.replicas] == ["r0", "r1", "r2"]
@@ -393,6 +394,42 @@ def test_migrate_failure_restores_service_on_the_old_ring(tmp_path,
 # -- chaos: corrupt files inside a migrating slice ----------------------------
 
 
+def _corrupt_stored_key(store, key):
+    """Engine-agnostic damage: make ``key``'s stored record unloadable
+    (unparseable file for the JSON layout, CRC-broken record payload for
+    the segment log)."""
+    if hasattr(store, "_seg_files"):
+        # segment log: zero the first payload bytes of the record
+        import os
+        store._ensure_fresh()
+        name, _no, off, _length, _ts = store._index[key]
+        with open(os.path.join(store.root, name), "r+b") as f:
+            f.seek(off)
+            f.write(b"\x00\x00\x00\x00")
+    else:  # file-per-key layout
+        with open(store.path_for(key), "w") as f:
+            f.write("{torn mid-write")
+
+
+def _foreign_schema_key(store, key):
+    """Engine-agnostic damage: rewrite ``key``'s record under a foreign
+    schema version (skipped + counted by either engine)."""
+    if hasattr(store, "_seg_files"):
+        raw = store.get_raw(key)
+        store.schema_version = 99  # instance attr: appends a v99 record
+        try:
+            store.put_raw(key, raw)
+        finally:
+            del store.__dict__["schema_version"]
+    else:
+        path = store.path_for(key)
+        with open(path) as f:
+            payload = json.load(f)
+        payload["version"] = 99
+        with open(path, "w") as f:
+            json.dump(payload, f)
+
+
 def test_corrupt_files_in_slice_never_break_migration(tmp_path):
     """Chaos satellite: a slice being handed off contains an
     unparseable file and a foreign-schema file. Migration must
@@ -407,14 +444,8 @@ def test_corrupt_files_in_slice_never_break_migration(tmp_path):
                      key=lambda r: len(list(r.service.store.keys())))
         vkeys = sorted(victim.service.store.keys())
         assert len(vkeys) >= 2, "grid too small to damage two keys"
-        with open(victim.service.store.path_for(vkeys[0]), "w") as f:
-            f.write("{torn mid-write")                  # unparseable
-        path = victim.service.store.path_for(vkeys[1])
-        with open(path) as f:
-            payload = json.load(f)
-        payload["version"] = 99                         # foreign schema
-        with open(path, "w") as f:
-            json.dump(payload, f)
+        _corrupt_stored_key(victim.service.store, vkeys[0])
+        _foreign_schema_key(victim.service.store, vkeys[1])
         healthy = set(vkeys[2:])
         fleet.remove_replica(victim.name)               # must not raise
         assert victim.service.store.stats.corrupt >= 2  # damage was skipped

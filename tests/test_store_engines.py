@@ -1,0 +1,428 @@
+"""Differential + crash-point harness for the store engines.
+
+The segment-log engine (``SegmentLogStore``) must be *observationally
+identical* to the historical file-per-key layout (``JsonFileStore``)
+behind the shared merge contract. Three layers of proof live here:
+
+1. **Transfer**: the existing ``test_kvstore`` / ``test_trace_store``
+   suites run VERBATIM against the segment engine — the ``store_engine``
+   fixture (tests/conftest.py) rebinds their module-global store classes
+   via :func:`patch_segment`, so every behavioural test those suites
+   encode is executed once per backend with zero edits.
+2. **Differential**: a seeded random op script (put/delete/merge/split/
+   compact/clear, from ``benchmarks.bench_kvstore``) is applied to both
+   engines in lockstep; every op result and every periodic content
+   digest must match byte-for-byte, including after a cold reopen. The
+   nightly CI job runs the same harness for 10^5 ops and uploads the op
+   log so any mismatch replays bit-for-bit.
+3. **Crash points**: every protocol step boundary the engine declares
+   (``_crash_hook`` sites) is killed mid-flight and the directory
+   reopened — no acknowledged write may be lost, unacknowledged tails
+   must be truncated (not counted as damage), and a retried operation
+   must converge.
+
+Layout-specific behaviours that cannot transfer (the JSON suite pokes
+individual files; a log has records) get hand-ported segment
+equivalents in this module.
+"""
+
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.serve import kvstore
+from repro.serve.feedback_store import SegmentFeedbackStore
+from repro.serve.kvstore import SegmentLogStore, SimulatedCrash
+from repro.serve.trace_store import SegmentTraceStore
+
+import test_kvstore
+import test_trace_store
+from test_trace_store import _record
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.bench_kvstore import gen_ops, run_differential  # noqa: E402
+
+
+class _SegTagStore(SegmentLogStore):
+    """``test_kvstore._TagStore``'s value semantics on the segment
+    engine — literally the same hook functions, different layout, which
+    is the whole claim under test."""
+
+    FILE_PREFIX = "tag_"
+    VALUE_FIELD = "tags"
+    _check_raw = test_kvstore._TagStore._check_raw
+    _merge_raw = test_kvstore._TagStore._merge_raw
+
+
+def patch_segment(monkeypatch):
+    """Rebind the store classes the existing suites use as module
+    globals so their tests exercise the segment engine unmodified."""
+    monkeypatch.setattr(test_kvstore, "TraceStore", SegmentTraceStore)
+    monkeypatch.setattr(test_kvstore, "FeedbackStore", SegmentFeedbackStore)
+    monkeypatch.setattr(test_kvstore, "_TagStore", _SegTagStore)
+    monkeypatch.setattr(test_trace_store, "TraceStore", SegmentTraceStore)
+
+
+# -- layer 1: the existing suites, parametrized over both engines -------------
+
+_KVSTORE_PROPERTY_TESTS = (
+    "test_schema_version_is_shared_by_every_store",
+    "test_trace_roundtrip_property",
+    "test_feedback_roundtrip_property",
+    "test_trace_merge_is_commutative_and_idempotent",
+    "test_feedback_merge_three_way_converges",
+    "test_trace_compact_never_drops_newest",
+    "test_feedback_compact_never_drops_newest_per_key",
+    "test_corrupt_injection_never_raises",
+)
+
+_KVSTORE_DIRECTORY_TESTS = (
+    "test_base_supports_new_store_kinds",
+    "test_clear_removes_only_own_prefix",
+    "test_split_serializes_concurrent_writer",
+    "test_feedback_compact_is_safe_under_concurrent_readers",
+    "test_base_compact_is_safe_under_concurrent_readers",
+)
+
+_TRACE_STORE_TESTS = (
+    "test_roundtrip_preserves_record",
+    "test_miss_returns_none_and_counts",
+    "test_put_leaves_no_temp_files",
+    "test_clear_removes_files",
+    "test_compact_is_safe_under_concurrent_readers",
+    "test_trace_writes_through_and_second_service_warm_starts",
+    "test_eviction_falls_back_to_store_without_retrace",
+    "test_cache_info_reports_memory_and_store_distinctly",
+)
+
+
+@pytest.mark.parametrize("name", _KVSTORE_PROPERTY_TESTS)
+def test_kvstore_suite_transfers(store_engine, name):
+    getattr(test_kvstore, name)()
+
+
+@pytest.mark.parametrize("name", _KVSTORE_DIRECTORY_TESTS)
+def test_kvstore_directory_suite_transfers(store_engine, name, tmp_path):
+    getattr(test_kvstore, name)(tmp_path)
+
+
+@pytest.mark.parametrize("name", _TRACE_STORE_TESTS)
+def test_trace_store_suite_transfers(store_engine, name, tmp_path):
+    getattr(test_trace_store, name)(tmp_path)
+
+
+# -- layer 1b: segment equivalents of the layout-specific JSON tests ----------
+
+
+def test_segment_mixed_schema_generations(tmp_path):
+    """Log analog of ``test_v_mixed_directory_loads_identically``: a
+    segment holding records from several schema generations serves the
+    current one and skips+counts the rest; compaction reclaims them."""
+    ts = SegmentTraceStore(str(tmp_path))
+    keys = [("aa" * 8, 2, 32), ("bb" * 8, 4, 32), ("cc" * 8, 8, 64)]
+    for key, version in zip(keys, (0, 99, None)):
+        if version is not None:
+            ts.schema_version = version  # instance attr: foreign record
+        try:
+            ts.put(key, _record(batch=key[1], seq=key[2]))
+        finally:
+            ts.__dict__.pop("schema_version", None)
+    fresh = SegmentTraceStore(str(tmp_path))
+    assert fresh.get(keys[2]) is not None
+    assert fresh.get(keys[0]) is None and fresh.get(keys[1]) is None
+    assert fresh.stats.corrupt == 2
+    assert list(fresh.keys()) == [keys[2]]
+    assert fresh.compact()["kept"] == 1
+    again = SegmentTraceStore(str(tmp_path))
+    assert again.raw_snapshot() == {keys[2]: fresh.get_raw(keys[2])}
+    assert again.stats.corrupt == 0  # physically reclaimed, not re-counted
+
+
+def test_segment_key_disagreement_dead_on_every_path(tmp_path):
+    """Log analog of the renamed-file test: an index entry pointing at a
+    record whose embedded key disagrees is refused everywhere."""
+    ts = SegmentTraceStore(str(tmp_path / "t"))
+    key, other = ("11" * 8, 2, 32), ("22" * 8, 4, 64)
+    ts.put(key, _record())
+    ts._ensure_fresh()
+    ts._index[other] = ts._index.pop(key)  # tampered mapping
+    assert ts.get(other) is None and ts.stats.corrupt == 1
+    assert ts.get(key) is None  # original mapping gone too
+    assert list(ts.keys()) == []
+    sink = SegmentTraceStore(str(tmp_path / "sink"))
+    assert sink.merge(ts) == 0  # never propagates
+
+
+def test_segment_torn_tail_truncated_not_fatal(tmp_path):
+    ts = SegmentTraceStore(str(tmp_path))
+    k1, k2 = ("aa" * 8, 2, 32), ("bb" * 8, 4, 32)
+    ts.put(k1, _record())
+    ts.put(k2, _record(batch=4))
+    path = ts._seg_path(ts._active_no)
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) - 7)  # rip the tail mid-payload
+    fresh = SegmentTraceStore(str(tmp_path))
+    assert fresh.get(k1) is not None
+    assert fresh.get(k2) is None
+    assert fresh.torn_truncated == 1 and fresh.stats.corrupt == 0
+    again = SegmentTraceStore(str(tmp_path))  # the truncation is physical:
+    assert again.torn_truncated == 0          # a second open is clean
+
+
+def test_segment_mid_corruption_skips_one_record(tmp_path):
+    ts = SegmentTraceStore(str(tmp_path))
+    keys = [(f"{i:02d}" * 8, 2, 32) for i in range(3)]
+    for key in keys:
+        ts.put(key, _record())
+    name, _no, off, _length, _ts = ts._index[keys[1]]
+    with open(os.path.join(str(tmp_path), name), "r+b") as f:
+        f.seek(off)
+        f.write(b"\x00\x00\x00\x00")  # break the MIDDLE record's CRC
+    fresh = SegmentTraceStore(str(tmp_path))
+    assert fresh.get(keys[0]) is not None  # before the damage
+    assert fresh.get(keys[2]) is not None  # resynced past the damage
+    assert fresh.get(keys[1]) is None
+    assert fresh.stats.corrupt == 1 and fresh.torn_truncated == 0
+
+
+def test_segment_seal_and_hints_roundtrip(tmp_path):
+    """Sealing persists a hint file per immutable segment; a reopened
+    instance serves the identical content whether it loads hints,
+    rejects a poisoned one, or rejects a stale (wrong-size) one."""
+    ts = SegmentTraceStore(str(tmp_path), segment_bytes=2048)
+    for i in range(12):
+        ts.put((f"{i:02x}" * 8, 2, 32), _record(f"m{i}"))
+    assert ts.sealed_segments >= 1 and len(ts._files()) >= 2
+    hints = [n for n in os.listdir(tmp_path) if n.endswith(".log.idx")]
+    assert len(hints) == ts.sealed_segments
+    baseline = ts.raw_snapshot()
+    assert SegmentTraceStore(str(tmp_path)).raw_snapshot() == baseline
+    # stale hint (valid JSON, wrong size): rejected, falls back to scan
+    sealed_no = min(no for no, _ in ts._seg_files())
+    kvstore.atomic_write_json(
+        str(tmp_path), ts._hint_path(sealed_no),
+        {"version": ts.schema_version, "size": 1, "records": []})
+    stale = SegmentTraceStore(str(tmp_path))
+    assert stale.raw_snapshot() == baseline and stale.stats.corrupt == 0
+    # poisoned hints (unparseable): same fallback, still not "corrupt"
+    for n in hints:
+        with open(os.path.join(str(tmp_path), n), "w") as f:
+            f.write("{ not a hint")
+    poisoned = SegmentTraceStore(str(tmp_path))
+    assert poisoned.raw_snapshot() == baseline
+    assert poisoned.stats.corrupt == 0
+
+
+def test_segment_open_scans_only_the_active_segment(tmp_path, monkeypatch):
+    """The hint fast path is load-bearing: opening a directory of sealed
+    segments byte-scans ONLY the newest (possibly-torn) segment."""
+    ts = SegmentTraceStore(str(tmp_path), segment_bytes=2048)
+    for i in range(12):
+        ts.put((f"{i:02x}" * 8, 2, 32), _record(f"m{i}"))
+    assert len(ts._files()) >= 3
+    scans = []
+    orig = SegmentLogStore._scan_segment
+    monkeypatch.setattr(
+        SegmentLogStore, "_scan_segment",
+        lambda self, path: (scans.append(path), orig(self, path))[1])
+    fresh = SegmentTraceStore(str(tmp_path))
+    assert fresh.raw_snapshot() == ts.raw_snapshot()
+    assert len(scans) == 1 and scans[0] == ts._seg_path(ts._active_no)
+
+
+# -- layer 2: differential — one op script, two engines, equal everywhere -----
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000), st.integers(20, 80))
+def test_engines_agree_on_randomized_op_scripts(seed, n_ops):
+    """Seeded put/delete/merge/split/compact/clear scripts applied to
+    both engines in lockstep: every op result and every content digest
+    (including after a cold reopen) must be byte-equal. The nightly CI
+    soak runs this exact harness for 10^5 ops."""
+    rng = np.random.default_rng(seed)
+    ops = gen_ops(rng, int(n_ops))
+    with tempfile.TemporaryDirectory() as root:
+        report = run_differential(root, ops, segment_bytes=2 << 10,
+                                  check_every=16)
+        assert report["ok"], report
+
+
+# -- layer 3: crash-point injection ------------------------------------------
+
+CRASH_SITES = ("append_mid", "append_durable", "seal",
+               "compact_rewrite", "compact_retire")
+
+
+def _arm(store, site, when=1):
+    """Raise :class:`SimulatedCrash` the ``when``-th time ``site`` fires."""
+    seen = {"n": 0}
+
+    def hook(s):
+        if s == site:
+            seen["n"] += 1
+            if seen["n"] == when:
+                raise SimulatedCrash(site)
+
+    store._crash_hook = hook
+    return seen
+
+
+def test_every_declared_crash_site_fires(tmp_path):
+    """Coverage guard: drive ops that traverse all five sites with a
+    recording (non-raising) hook — a renamed or dropped site would
+    silently hollow out the crash suite otherwise."""
+    fired = set()
+    ts = SegmentTraceStore(str(tmp_path), segment_bytes=1200)
+    ts._crash_hook = fired.add
+    for i in range(6):
+        ts.put((f"{i:02x}" * 8, 2, 32), _record(f"m{i}"))
+    ts._delete_key((f"{0:02x}" * 8, 2, 32))
+    ts.compact()
+    assert fired == set(CRASH_SITES)
+
+
+def test_crash_append_mid_loses_only_the_unacked_write(tmp_path):
+    ts = SegmentTraceStore(str(tmp_path))
+    acked = {}
+    for i in range(4):
+        key = (f"{i:02x}" * 8, 2, 32)
+        acked[key] = _record(f"m{i}")
+        ts.put(key, acked[key])
+    _arm(ts, "append_mid")
+    victim = ("ff" * 8, 4, 32)
+    with pytest.raises(SimulatedCrash):
+        ts.put(victim, _record("victim", batch=4))
+    # the process is dead; a new one opens the same directory
+    fresh = SegmentTraceStore(str(tmp_path))
+    assert len(fresh) == len(acked)    # (triggers the lazy open scan)
+    assert fresh.torn_truncated == 1   # half-written tail ripped out...
+    assert fresh.stats.corrupt == 0    # ...as unacked, never as damage
+    for key, rec in acked.items():
+        assert fresh.get(key) == rec   # no acknowledged write lost
+    assert fresh.get(victim) is None
+    fresh.put(victim, _record("victim", batch=4))  # the retry just works
+    assert fresh.get(victim) is not None
+
+
+def test_crash_append_durable_put_surfaces_complete_record(tmp_path):
+    """Crash AFTER the record is durable, BEFORE the index ack: the
+    write was never acknowledged, so surfacing it on reopen is the
+    legal outcome for a complete record — what is never legal is
+    losing an acked key or counting the record as damage."""
+    ts = SegmentTraceStore(str(tmp_path))
+    prior = ("aa" * 8, 2, 32)
+    ts.put(prior, _record())
+    _arm(ts, "append_durable")
+    victim = ("bb" * 8, 4, 32)
+    rec = _record("durable", batch=4)
+    with pytest.raises(SimulatedCrash):
+        ts.put(victim, rec)
+    fresh = SegmentTraceStore(str(tmp_path))
+    assert fresh.get(prior) is not None
+    assert fresh.get(victim) == rec
+    assert fresh.torn_truncated == 0 and fresh.stats.corrupt == 0
+
+
+def test_crash_append_durable_delete_tombstone_wins(tmp_path):
+    ts = SegmentTraceStore(str(tmp_path))
+    doomed, kept = ("aa" * 8, 2, 32), ("bb" * 8, 4, 32)
+    ts.put(doomed, _record())
+    ts.put(kept, _record(batch=4))
+    _arm(ts, "append_durable")
+    with pytest.raises(SimulatedCrash):
+        ts._delete_key(doomed)
+    fresh = SegmentTraceStore(str(tmp_path))
+    assert fresh.get(doomed) is None   # durable tombstone took effect
+    assert fresh.get(kept) is not None
+    assert fresh.torn_truncated == 0 and fresh.stats.corrupt == 0
+
+
+def test_crash_at_seal_serves_everything_and_keeps_appending(tmp_path):
+    ts = SegmentTraceStore(str(tmp_path), segment_bytes=600)
+    acked = []
+    _arm(ts, "seal")
+    with pytest.raises(SimulatedCrash):
+        for i in range(200):
+            key = (f"{i:02x}" * 8, 2, 32)
+            ts.put(key, _record(f"m{i}"))
+            acked.append(key)
+    assert acked  # guard: the crash fired mid-loop, not before it
+    fresh = SegmentTraceStore(str(tmp_path), segment_bytes=600)
+    for key in acked:
+        assert fresh.get(key) is not None
+    # the put that crossed the threshold was durable+indexed pre-seal
+    trigger = (f"{len(acked):02x}" * 8, 2, 32)
+    assert fresh.get(trigger) is not None
+    assert fresh.stats.corrupt == 0 and fresh.torn_truncated == 0
+    fresh.put(("ee" * 8, 8, 64), _record("post", batch=8))
+    assert fresh.get(("ee" * 8, 8, 64)) is not None
+
+
+@pytest.mark.parametrize("site", ("compact_rewrite", "compact_retire"))
+def test_crash_mid_compact_loses_nothing_and_retry_converges(tmp_path, site):
+    ts = SegmentTraceStore(str(tmp_path), segment_bytes=1200)
+    for i in range(10):
+        ts.put((f"{i:02x}" * 8, 2, 32), _record(f"m{i}"))
+    baseline = ts.raw_snapshot()
+    _arm(ts, site)
+    with pytest.raises(SimulatedCrash):
+        ts.compact()
+    fresh = SegmentTraceStore(str(tmp_path))
+    assert fresh.raw_snapshot() == baseline  # old + new dedupe, zero loss
+    assert fresh.stats.corrupt == 0
+    out = fresh.compact()                    # the retry converges...
+    assert out["kept"] == len(baseline)
+    again = SegmentTraceStore(str(tmp_path))
+    assert again.raw_snapshot() == baseline  # ...and retires the backlog
+    assert len(again._files()) <= 2
+
+
+# -- single-scan discipline: stat-count regression ----------------------------
+
+
+def _count_os_stat(monkeypatch):
+    calls = {"n": 0}
+    real = os.stat
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(os, "stat", counting)
+    return calls
+
+
+def test_json_compact_makes_zero_os_stat_calls(tmp_path, monkeypatch):
+    """Regression for the single-scan fix: ``JsonFileStore.compact``
+    takes every (mtime, size) from the one directory scan
+    (``os.scandir`` DirEntry.stat) — zero python-level ``os.stat``
+    calls regardless of record count."""
+    store = test_kvstore._TagStore(str(tmp_path))
+    for i in range(40):
+        store.put_raw((f"{i:02x}" * 8, 2, 32), {"t": i})
+    calls = _count_os_stat(monkeypatch)
+    out = store.compact(max_entries=10)
+    assert out["kept"] == 10  # the compaction actually did the work
+    assert calls["n"] == 0
+
+
+def test_segment_compact_stat_count_independent_of_records(tmp_path,
+                                                           monkeypatch):
+    """The segment engine's compact stats a constant number of paths
+    (freshness probe + directory fingerprint), never per-record."""
+    counts = []
+    for n, sub in ((8, "a"), (64, "b")):
+        store = _SegTagStore(str(tmp_path / sub))
+        for i in range(n):
+            store.put_raw((f"{i:02x}" * 8, 2, 32), {"t": i})
+        calls = _count_os_stat(monkeypatch)
+        store.compact()
+        monkeypatch.undo()
+        counts.append(calls["n"])
+    assert counts[0] == counts[1]
